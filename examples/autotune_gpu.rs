@@ -1,0 +1,53 @@
+//! Transfer to the SECOND target (§4.3): CPU-pre-trained cost model
+//! fine-tuned for the GPU platform, per-matrix speedup report.
+//!
+//!   cargo run --release --example autotune_gpu [-- --op sddmm]
+
+use cognate::config::PlatformId;
+use cognate::coordinator::{Pipeline, Scale};
+use cognate::kernels::Op;
+use cognate::model::ModelDriver;
+use cognate::search::{evaluate, oracle_summary};
+use cognate::train::train;
+use cognate::util::table::Table;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let op = if std::env::args().any(|a| a == "sddmm") { Op::Sddmm } else { Op::Spmm };
+    let mut pipe = Pipeline::new(Scale::small())?;
+    let target = PlatformId::Gpu;
+
+    let src = pipe.dataset(PlatformId::Cpu, op)?;
+    let tgt = pipe.dataset(target, op)?;
+    let z_src = pipe.trained_ae(PlatformId::Cpu, "ae", 1)?;
+    let z_tgt = pipe.trained_ae(target, "ae", 2)?;
+
+    let (pool, _) = pipe.splits(&src);
+    let idx = pipe.pretrain_subset(&src, &pool, pipe.scale.pretrain_matrices);
+    let mut driver = ModelDriver::init(pipe.rt.clone(), "cognate", 21)?;
+    train(&mut driver, &z_src, &src, &idx, &[], &pipe.scale.pretrain_opts.clone())?;
+
+    let (tpool, eval_idx) = pipe.splits(&tgt);
+    let ft: Vec<usize> = tpool.into_iter().take(pipe.scale.finetune_matrices).collect();
+    let mut tuned = driver.fork_for_finetune();
+    train(&mut tuned, &z_tgt, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone())?;
+
+    let default_index = cognate::config::default_config_index(target);
+    let top1 = evaluate(&tuned, &z_tgt, &tgt, &eval_idx, default_index, 1)?;
+    let top5 = evaluate(&tuned, &z_tgt, &tgt, &eval_idx, default_index, 5)?;
+    let oracle = oracle_summary(&tgt, &eval_idx, default_index);
+
+    let mut t = Table::new(
+        &format!("gpu transfer, {} — per-matrix top-5 speedups", op.name()),
+        &["matrix", "top5_speedup", "optimal"],
+    );
+    for e in &top5.per_matrix {
+        t.row(vec![e.name.clone(), Table::f(e.speedup), Table::f(e.optimal_speedup)]);
+    }
+    println!("{}", t.render());
+    println!(
+        "geomean: top-1 {:.3}x, top-5 {:.3}x, optimal {:.3}x",
+        top1.geomean_speedup, top5.geomean_speedup, oracle.geomean_speedup
+    );
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//!   cargo run --release --example dse_spade [-- --scale N]
+//!
+//! Runs the paper's full SPADE design-space-exploration pipeline on a
+//! real (synthetic-collection) workload and prints the Fig-4-shaped
+//! headline comparison — zero-shot / no-transfer / WACO+FA / WACO+FM /
+//! COGNATE top-1/top-5 / oracle — together with the training loss curve,
+//! proving all three layers compose: Rust coordinator + simulators →
+//! PJRT-executed JAX/Pallas train & inference artifacts → evaluation.
+
+use cognate::coordinator::{experiments, Pipeline, Scale};
+use cognate::kernels::Op;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let scale_arg = std::env::args()
+        .skip_while(|a| a != "--scale")
+        .nth(1)
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(1);
+    let t0 = std::time::Instant::now();
+    let mut pipe = Pipeline::new(Scale::scaled(scale_arg))?;
+
+    // Training curve (Fig 6 shape) first: shows the model actually learns.
+    let tables = experiments::run(&mut pipe, "fig6")?;
+    drop(tables);
+
+    // Headline: every method on SpMM/SPADE (Fig 2 / Fig 4 left).
+    experiments::run(&mut pipe, "fig2")?;
+
+    // Landscape-correlation diagnostic (the transfer premise).
+    let diag = experiments::correlation_diagnostic(&mut pipe, Op::Spmm)?;
+    println!("{}", diag.render());
+
+    println!(
+        "dse_spade complete in {:.1}s (scale {scale_arg}); CSVs in results/",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

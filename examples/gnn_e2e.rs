@@ -1,0 +1,124 @@
+//! GNN end-to-end (§4.3): a GraphSAGE-style layer stack built on the
+//! *executable* SpMM substrate, with the schedule chosen by a trained
+//! COGNATE cost model vs. the default schedule — reporting real
+//! wall-clock inference speedup on a 'transient'-scale synthetic graph.
+//!
+//!   cargo run --release --example gnn_e2e
+
+use cognate::config::{Config, CpuOrder, PlatformId};
+use cognate::coordinator::{Pipeline, Scale};
+use cognate::kernels::{spmm_scheduled, Op, SpmmSchedule};
+use cognate::model::ModelDriver;
+use cognate::platform::make_platform;
+use cognate::search::{score_all, top_k};
+use cognate::sparse::gen::{generate, Family};
+use cognate::train::train;
+use cognate::util::rng::Rng;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Map a CPU config onto the executable SpMM schedule.
+fn schedule_for(cfg: &Config) -> SpmmSchedule {
+    match cfg {
+        Config::Cpu(c) => SpmmSchedule {
+            i_block: c.i_split,
+            k_block: c.k_split,
+            outer_k: matches!(c.order, CpuOrder::KOuter | CpuOrder::KJOuter),
+        },
+        _ => SpmmSchedule::default(),
+    }
+}
+
+/// One GraphSAGE layer: H' = relu( (A · H) · W ), A row-normalised.
+fn sage_layer(a: &cognate::sparse::Csr, h: &[f32], w: &[f32], din: usize, dout: usize, s: SpmmSchedule, agg: &mut [f32], out: &mut [f32]) {
+    spmm_scheduled(a, h, din, s, agg);
+    // Dense projection + ReLU (plain host matmul — the sparse op is the
+    // tunable bottleneck this example measures).
+    for r in 0..a.rows {
+        for j in 0..dout {
+            let mut acc = 0f32;
+            for k in 0..din {
+                acc += agg[r * din + k] * w[k * dout + j];
+            }
+            out[r * dout + j] = acc.max(0.0);
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    // 'transient'-scale graph, shrunk to keep the demo quick: the paper's
+    // matrix has 178,866 nodes / 961,368 nnz; we use a proportional
+    // RMAT graph (n=20k, nnz≈110k) with the same density profile.
+    let n = 20_000;
+    let graph = generate(Family::Rmat, n, n, 110_000.0 / (n as f64 * n as f64), 0xA11);
+    let hidden = 64usize; // 3 hidden layers à la GraphSAGE config
+    println!("graph: {}x{} nnz={}", graph.rows, graph.cols, graph.nnz());
+
+    // Train a COGNATE model for the CPU platform (source == target here:
+    // the GNN runs on the CPU substrate we can actually execute).
+    let mut scale = Scale::small();
+    scale.pretrain_opts.epochs = 6;
+    let mut pipe = Pipeline::new(scale)?;
+    let ds = pipe.dataset(PlatformId::Cpu, Op::Spmm)?;
+    let zenc = pipe.trained_ae(PlatformId::Cpu, "ae", 3)?;
+    let (pool, _) = pipe.splits(&ds);
+    let idx = pipe.pretrain_subset(&ds, &pool, pipe.scale.pretrain_matrices);
+    let mut driver = ModelDriver::init(pipe.rt.clone(), "cognate", 5)?;
+    train(&mut driver, &zenc, &ds, &idx, &[], &pipe.scale.pretrain_opts.clone())?;
+
+    // Ask the model for the best schedule for THIS graph.
+    let sim = make_platform(PlatformId::Cpu);
+    let costs = sim.eval_all(&graph, Op::Spmm);
+    let rec = cognate::coordinator::serve::record_for(&graph, costs, "transient-like");
+    let scores = score_all(&driver, &zenc, &ds, &rec, None)?;
+    let best = top_k(&scores, 5)
+        .into_iter()
+        .min_by(|&a, &b| rec.costs[a].partial_cmp(&rec.costs[b]).unwrap())
+        .unwrap();
+    let tuned_sched = schedule_for(&sim.config(best));
+    let default_sched = schedule_for(&sim.config(sim.default_index()));
+    println!("default schedule: {default_sched:?}");
+    println!("tuned schedule:   {tuned_sched:?} (config #{best})");
+
+    // Run 3-layer GraphSAGE inference under both schedules.
+    let mut rng = Rng::new(1);
+    let feat: Vec<f32> = (0..n * hidden).map(|_| rng.next_f32() - 0.5).collect();
+    let weights: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..hidden * hidden).map(|_| (rng.next_f32() - 0.5) * 0.2).collect())
+        .collect();
+    let mut time_with = |s: SpmmSchedule| -> (f64, f32) {
+        let mut h = feat.clone();
+        let mut agg = vec![0f32; n * hidden];
+        let mut out = vec![0f32; n * hidden];
+        let t0 = Instant::now();
+        for w in &weights {
+            sage_layer(&graph, &h, w, hidden, hidden, s, &mut agg, &mut out);
+            std::mem::swap(&mut h, &mut out);
+        }
+        (t0.elapsed().as_secs_f64(), h.iter().sum::<f32>())
+    };
+    // Warm-up then measure best-of-3 for stability.
+    let _ = time_with(default_sched);
+    let (mut td, mut tt) = (f64::INFINITY, f64::INFINITY);
+    let (mut cd, mut ct) = (0f32, 0f32);
+    for _ in 0..3 {
+        let (t, c) = time_with(default_sched);
+        if t < td {
+            td = t;
+            cd = c;
+        }
+        let (t, c) = time_with(tuned_sched);
+        if t < tt {
+            tt = t;
+            ct = c;
+        }
+    }
+    assert!((cd - ct).abs() <= 1e-2 * (1.0 + cd.abs()), "numerics must match");
+    println!(
+        "GraphSAGE 3-layer inference: default {:.1} ms, tuned {:.1} ms → {:.2}x speedup",
+        td * 1e3,
+        tt * 1e3,
+        td / tt
+    );
+    Ok(())
+}

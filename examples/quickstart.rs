@@ -1,0 +1,71 @@
+//! Quickstart: the whole COGNATE loop in one file, at micro scale.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. generate a small synthetic matrix collection,
+//! 2. collect cheap CPU samples + a few expensive SPADE samples
+//!    (deterministic simulators stand in for hardware — DESIGN.md),
+//! 3. train the latent autoencoder and pre-train the cost model on CPU,
+//! 4. few-shot fine-tune on SPADE (5 matrices),
+//! 5. pick top-5 configs for an unseen matrix and report the speedup.
+
+use cognate::config::PlatformId;
+use cognate::coordinator::{Pipeline, Scale};
+use cognate::kernels::Op;
+use cognate::model::ModelDriver;
+use cognate::platform::make_platform;
+use cognate::search::{eval_one, score_all};
+use cognate::sparse::gen::{generate, Family};
+use cognate::train::{train, TrainOpts};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let mut scale = Scale::small();
+    scale.per_cell = 2;
+    scale.max_dim = 1024;
+    scale.pretrain_matrices = 20;
+    scale.pretrain_opts = TrainOpts { epochs: 4, batches_per_epoch: 24, val_matrices: 0, ..TrainOpts::default() };
+    scale.finetune_opts = TrainOpts { epochs: 3, batches_per_epoch: 12, val_matrices: 0, ..TrainOpts::default() };
+    scale.ae_steps = 150;
+    let mut pipe = Pipeline::new(scale)?;
+    let op = Op::Spmm;
+
+    println!("== 1/5 collection + datasets (cpu source, spade target)");
+    let src = pipe.dataset(PlatformId::Cpu, op)?;
+    let tgt = pipe.dataset(PlatformId::Spade, op)?;
+
+    println!("== 2/5 latent autoencoders (§3.3)");
+    let z_src = pipe.trained_ae(PlatformId::Cpu, "ae", 1)?;
+    let z_tgt = pipe.trained_ae(PlatformId::Spade, "ae", 2)?;
+
+    println!("== 3/5 pre-train on cpu ({} matrices)", pipe.scale.pretrain_matrices);
+    let (pool, _) = pipe.splits(&src);
+    let idx = pipe.pretrain_subset(&src, &pool, pipe.scale.pretrain_matrices);
+    let mut driver = ModelDriver::init(pipe.rt.clone(), "cognate", 7)?;
+    train(&mut driver, &z_src, &src, &idx, &[], &pipe.scale.pretrain_opts.clone())?;
+
+    println!("== 4/5 few-shot fine-tune on spade ({} matrices)", pipe.scale.finetune_matrices);
+    let (tpool, _) = pipe.splits(&tgt);
+    let ft: Vec<usize> = tpool.into_iter().take(pipe.scale.finetune_matrices).collect();
+    let mut tuned = driver.fork_for_finetune();
+    train(&mut tuned, &z_tgt, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone())?;
+
+    println!("== 5/5 tune an unseen matrix");
+    let m = generate(Family::Rmat, 1500, 1500, 0.01, 0xBEE);
+    let sim = make_platform(PlatformId::Spade);
+    let costs = sim.eval_all(&m, op);
+    let rec = cognate::coordinator::serve::record_for(&m, costs, "unseen-rmat");
+    let scores = score_all(&tuned, &z_tgt, &tgt, &rec, None)?;
+    let e = eval_one(&rec, &scores, sim.default_index(), 5);
+    println!(
+        "matrix {}x{} (nnz {}): cognate top-5 speedup {:.2}x over the default \
+         schedule (exhaustive optimum {:.2}x), chosen {:?}",
+        m.rows,
+        m.cols,
+        m.nnz(),
+        e.speedup,
+        e.optimal_speedup,
+        sim.config(e.chosen_index),
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Tuning-service demo: start the batched auto-tuning server with a
+//! quickly fine-tuned model and fire concurrent client requests at it,
+//! reporting latency and batching behaviour.
+//!
+//!   cargo run --release --example serve_demo
+
+use cognate::config::PlatformId;
+use cognate::coordinator::{serve, Pipeline, Scale};
+use cognate::kernels::Op;
+use cognate::model::ModelDriver;
+use cognate::sparse::gen::{generate, Family};
+use cognate::train::{train, TrainOpts};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let mut scale = Scale::small();
+    scale.pretrain_opts = TrainOpts { epochs: 3, batches_per_epoch: 16, val_matrices: 0, ..TrainOpts::default() };
+    scale.ae_steps = 100;
+    let mut pipe = Pipeline::new(scale)?;
+    let op = Op::Spmm;
+    let target = PlatformId::Spade;
+
+    let tgt = pipe.dataset(target, op)?;
+    let zenc = pipe.trained_ae(target, "ae", 2)?;
+    let (pool, _) = pipe.splits(&tgt);
+    let ft: Vec<usize> = pool.into_iter().take(5).collect();
+    let mut driver = ModelDriver::init(pipe.rt.clone(), "cognate", 4)?;
+    train(&mut driver, &zenc, &tgt, &ft, &[], &pipe.scale.pretrain_opts.clone())?;
+
+    let n_clients = 8;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve::serve(driver, zenc, target, "127.0.0.1:0", Some(n_clients), move |a| {
+            let _ = addr_tx.send(a);
+        })
+    });
+    let addr = addr_rx.recv()?;
+    println!("service up on {addr}; firing {n_clients} concurrent requests");
+
+    let t0 = std::time::Instant::now();
+    let clients: Vec<_> = (0..n_clients)
+        .map(|id| {
+            std::thread::spawn(move || {
+                let fam = [Family::Rmat, Family::PowerLaw, Family::Banded][id % 3];
+                let m = generate(fam, 400 + 100 * id, 500, 0.02, id as u64);
+                serve::request(addr, id as i64, 5, &m)
+            })
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    let mut batched = Vec::new();
+    for c in clients {
+        let resp = c.join().unwrap()?;
+        latencies.push(resp.req("latency_ms").as_f64().unwrap());
+        batched.push(resp.req("batched_with").as_f64().unwrap());
+        println!(
+            "  id={} top={} latency={:.1}ms batch={}",
+            resp.req("id").as_i64().unwrap(),
+            resp.req("top").to_string(),
+            resp.req("latency_ms").as_f64().unwrap(),
+            resp.req("batched_with").as_f64().unwrap(),
+        );
+    }
+    println!(
+        "served {n_clients} requests in {:.1}ms wall; mean latency {:.1}ms; mean batch size {:.1}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        latencies.iter().sum::<f64>() / latencies.len() as f64,
+        batched.iter().sum::<f64>() / batched.len() as f64,
+    );
+    let _ = server.join().unwrap();
+    Ok(())
+}

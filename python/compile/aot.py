@@ -1,0 +1,179 @@
+"""AOT lowering: every L2 entry point -> HLO *text* + manifest.json.
+
+Run once by `make artifacts`; the Rust runtime then loads/compiles the
+HLO through PJRT and Python never appears on the request path.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: the
+`xla` crate's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dims, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def spec_json(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_entry(out_dir, manifest, name, fn, arg_specs):
+    """Lower `fn` at `arg_specs` and record it in the manifest."""
+    lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in arg_specs])
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # Output specs from the lowered computation's result shapes.
+    out_specs = [
+        {"shape": list(x.shape), "dtype": str(x.dtype)}
+        for x in jax.eval_shape(fn, *[s for _, s in arg_specs])
+    ]
+    manifest["artifacts"][name] = {
+        "file": fname,
+        "inputs": [spec_json(n, s) for n, s in arg_specs],
+        "outputs": out_specs,
+    }
+    print(f"  {name}: {len(text) / 1024:.0f} KiB, {len(arg_specs)} inputs")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(model.VARIANTS),
+        help="comma-separated model variants to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "dims": {
+            "DMAP_C": dims.DMAP_C,
+            "DMAP_H": dims.DMAP_H,
+            "DMAP_W": dims.DMAP_W,
+            "MAPPED_DIM": dims.MAPPED_DIM,
+            "HET_DIM": dims.HET_DIM,
+            "FA_DIM": dims.FA_DIM,
+            "EMBED_DIM": dims.EMBED_DIM,
+            "LATENT_DIM": dims.LATENT_DIM,
+            "FEAT_B": dims.FEAT_B,
+            "SCORE_B": dims.SCORE_B,
+            "TRAIN_B": dims.TRAIN_B,
+            "MARGIN": dims.MARGIN,
+            "LR": dims.LR,
+        },
+        "theta_len": {},
+        "artifacts": {},
+    }
+
+    dmap_feat = f32(dims.FEAT_B, dims.DMAP_C, dims.DMAP_H, dims.DMAP_W)
+    dmap_train = f32(dims.TRAIN_B, dims.DMAP_C, dims.DMAP_H, dims.DMAP_W)
+
+    for variant in args.variants.split(","):
+        print(f"[aot] lowering variant {variant!r}")
+        cfg_dim = dims.FA_DIM if variant == "waco_fa" else dims.MAPPED_DIM
+        theta_len, init_f, feat_f, scorec_f, train_f = model.make_flat_fns(variant)
+        manifest["theta_len"][variant] = theta_len
+        th = f32(theta_len)
+        lower_entry(args.out, manifest, f"{variant}_init", init_f, [("seed", i32())])
+        lower_entry(
+            args.out,
+            manifest,
+            f"{variant}_featurize",
+            feat_f,
+            [("theta", th), ("dmap", dmap_feat)],
+        )
+        lower_entry(
+            args.out,
+            manifest,
+            f"{variant}_score_cached",
+            scorec_f,
+            [
+                ("theta", th),
+                ("s", f32(dims.SCORE_B, dims.EMBED_DIM)),
+                ("cfg", f32(dims.SCORE_B, cfg_dim)),
+                ("z", f32(dims.SCORE_B, dims.LATENT_DIM)),
+            ],
+        )
+        lower_entry(
+            args.out,
+            manifest,
+            f"{variant}_train",
+            train_f,
+            [
+                ("theta", th),
+                ("m", th),
+                ("v", th),
+                ("step", f32()),
+                ("dmap", dmap_train),
+                ("cfg_a", f32(dims.TRAIN_B, cfg_dim)),
+                ("z_a", f32(dims.TRAIN_B, dims.LATENT_DIM)),
+                ("cfg_b", f32(dims.TRAIN_B, cfg_dim)),
+                ("z_b", f32(dims.TRAIN_B, dims.LATENT_DIM)),
+                ("sign", f32(dims.TRAIN_B)),
+                ("weight", f32(dims.TRAIN_B)),
+            ],
+        )
+
+    for kind in model.AE_KINDS:
+        print(f"[aot] lowering autoencoder {kind!r}")
+        theta_len, init_f, enc_f, train_f = model.make_ae_fns(kind)
+        manifest["theta_len"][kind] = theta_len
+        th = f32(theta_len)
+        lower_entry(args.out, manifest, f"{kind}_init", init_f, [("seed", i32())])
+        lower_entry(
+            args.out,
+            manifest,
+            f"{kind}_encode",
+            enc_f,
+            [("theta", th), ("x", f32(dims.SCORE_B, dims.HET_DIM))],
+        )
+        lower_entry(
+            args.out,
+            manifest,
+            f"{kind}_train",
+            train_f,
+            [
+                ("theta", th),
+                ("m", th),
+                ("v", th),
+                ("step", f32()),
+                ("x", f32(dims.SCORE_B, dims.HET_DIM)),
+                ("eps", f32(dims.SCORE_B, dims.LATENT_DIM)),
+            ],
+        )
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

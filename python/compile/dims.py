@@ -1,0 +1,42 @@
+"""Fixed dimensions shared across L1/L2 and (via artifacts/manifest.json)
+with the Rust L3 coordinator.
+
+Rust-side mirrors (checked at runtime against the manifest):
+  * DMAP_*   -> rust/src/sparse/features.rs
+  * MAPPED_DIM / HET_DIM / FA_DIM -> rust/src/config/encode.rs
+"""
+
+# Density-map rasterisation of the sparsity pattern (C, H, W).
+DMAP_C = 4
+DMAP_H = 32
+DMAP_W = 32
+
+# Configuration encodings.
+MAPPED_DIM = 53  # homogeneous (configuration-mapper input), paper Table 6
+HET_DIM = 16     # heterogeneous (latent-encoder input)
+FA_DIM = 30      # feature-augmentation baseline input
+
+# Embeddings (paper Table 6: matrix 128, config 64, latent 64).
+EMBED_DIM = 128
+CFG_EMBED = 64
+LATENT_DIM = 64
+
+# Featurizer conv pyramid: 4 blocks x 3 convs = 12 layers (paper Fig 3),
+# channels rising across blocks (vs. WACO's fixed width).
+FEAT_BLOCKS = ((8, 8, 16), (16, 16, 32), (32, 32, 64), (64, 64, 64))
+# WACO baseline featurizer: fixed-width, no channel growth.
+WACO_CHANNELS = 16
+WACO_LAYERS = 12
+
+# Batch shapes baked into the AOT artifacts (Rust pads partial batches).
+FEAT_B = 4    # matrices per featurize call
+SCORE_B = 64  # (config, matrix-embedding) rows per score call
+TRAIN_B = 8   # ranking pairs per train step
+
+# Training hyperparameters (paper Appendix F).
+MARGIN = 1.0
+LR = 1e-4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+AE_LR = 1e-3

@@ -1,0 +1,54 @@
+"""L1: 2-D convolution lowered to im2col + the Pallas matmul kernel.
+
+The paper's featurizer is a sparse CNN; our hardware adaptation keeps
+the conv-pyramid topology but runs it dense over density maps, and maps
+the convolution onto the MXU-friendly primitive we actually have: a
+tiled matmul. im2col is pure data movement (shift-and-stack, cheap and
+fusable by XLA); 100% of the FLOPs go through `matmul_fused`, so both
+forward and backward hit the Pallas tile kernel.
+
+Layout: NHWC (channels-last), SAME padding, stride 1.
+"""
+
+import jax.numpy as jnp
+
+from .matmul import matmul_fused
+
+
+def im2col(x, ksize: int):
+    """[B, H, W, C] -> [B, H, W, C*ksize*ksize] patch tensor (SAME)."""
+    b, h, w, c = x.shape
+    r = ksize // 2
+    xp = jnp.pad(x, ((0, 0), (r, r), (r, r), (0, 0)))
+    shifts = []
+    for dy in range(ksize):
+        for dx in range(ksize):
+            shifts.append(xp[:, dy : dy + h, dx : dx + w, :])
+    return jnp.concatenate(shifts, axis=-1)
+
+
+def conv2d(x, w, b, relu=True):
+    """SAME conv: x [B,H,W,Cin], w [k,k,Cin,Cout], b [Cout]."""
+    kh, kw, cin, cout = w.shape
+    assert kh == kw, "square kernels only"
+    bsz, h, wd, c = x.shape
+    assert c == cin, f"channel mismatch {c} != {cin}"
+    patches = im2col(x, kh)  # [B,H,W,Cin*k*k] — note shift-major order
+    flat = patches.reshape(bsz * h * wd, cin * kh * kw)
+    # Weight must match the patch ordering: (dy, dx, cin) -> rows.
+    wflat = w.transpose(0, 1, 2, 3).reshape(kh * kw * cin, cout)
+    out = matmul_fused(flat, wflat, b, relu)
+    return out.reshape(bsz, h, wd, cout)
+
+
+def maxpool2x2(x):
+    """[B,H,W,C] -> [B,H/2,W/2,C] max pooling (H, W even)."""
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims {h}x{w}"
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+def global_avg_pool(x):
+    """[B,H,W,C] -> [B,C]."""
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: tiled fused matmul (+bias, +optional ReLU).
+
+This is the compute hot-spot of the whole cost model — every MLP layer
+and (via im2col) every featurizer convolution lowers to it.
+
+TPU/MXU thinking (DESIGN.md §Hardware-Adaptation): the 128x128 output
+tile matches the MXU systolic array; the full-K operand panels live in
+VMEM for the duration of a tile (VMEM budget at our shapes: the largest
+K in the model is C*9 <= 1152 for conv im2col and 256 for the predictor,
+so an (128, K) f32 LHS tile tops out at 128*1152*4 B = 576 KiB and the
+(K, 128) RHS at the same — comfortably inside a 16 MiB VMEM alongside
+the 64 KiB accumulator, no K-loop double-buffering needed). Grid order
+is output-stationary: each (i, j) step writes its tile exactly once, so
+HBM<->VMEM traffic is one read of each operand panel row/col per tile
+plus one accumulator write — the BlockSpec equivalent of the
+threadblock-resident accumulation a CUDA kernel would use.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO.
+
+The backward pass reuses the SAME kernel (transposed operands), wired up
+with `jax.custom_vjp`, so training traffic also flows through Pallas.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile: MXU-shaped by default (128×128). On the CPU-interpret
+# path the per-grid-step dispatch overhead dominates tiny tiles, so the
+# §Perf pass can widen the M tile via env (COGNATE_BLOCK_M) at AOT time —
+# on a real TPU 128 stays optimal for the systolic array, and the VMEM
+# budget analysis below holds for either setting.
+import os
+
+BLOCK_M = int(os.environ.get("COGNATE_BLOCK_M", "128"))
+BLOCK_N = int(os.environ.get("COGNATE_BLOCK_N", "128"))
+
+
+def _mm_kernel(relu: bool, x_ref, w_ref, b_ref, o_ref):
+    """One (BLOCK_M, BLOCK_N) output tile: full-K panels in VMEM."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _matmul_raw(x, w, b, relu: bool):
+    """Pallas tiled matmul: x [M, K] @ w [K, N] + b [N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape}"
+    bm = min(BLOCK_M, m)
+    bn = min(BLOCK_N, n)
+    xp = _pad_to(x, 0, bm)
+    wp = _pad_to(w, 1, bn)
+    bp = _pad_to(b.reshape(1, n), 1, bn)
+    grid = (xp.shape[0] // bm, wp.shape[1] // bn)
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_fused(x, w, b, relu=False):
+    """Fused `relu?(x @ w + b)` through the Pallas tile kernel.
+
+    Differentiable: the VJP routes both gradient matmuls through the same
+    kernel (dx = g @ w.T, dw = x.T @ g).
+    """
+    return _matmul_raw(x, w, b, relu)
+
+
+def _mm_fwd(x, w, b, relu):
+    out = _matmul_raw(x, w, b, relu)
+    return out, (x, w, out if relu else None)
+
+
+def _mm_bwd(relu, res, g):
+    x, w, out = res
+    if relu:
+        g = jnp.where(out > 0.0, g, 0.0)
+    dx = _matmul_raw(g, w.T, jnp.zeros((w.shape[0],), jnp.float32), False)
+    dw = _matmul_raw(x.T, g, jnp.zeros((w.shape[1],), jnp.float32), False)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+matmul_fused.defvjp(_mm_fwd, _mm_bwd)
+
+
+def linear(params, x, relu=False):
+    """Convenience: apply a {'w','b'} layer dict via the Pallas kernel."""
+    return matmul_fused(x, params["w"], params["b"], relu)

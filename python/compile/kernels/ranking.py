@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: pairwise margin ranking loss (Appendix A.4).
+
+Per pair (a, b) with true-order sign s in {-1, 0, +1} and sample weight
+w (0 for padded rows of a fixed-size batch):
+
+    l_i = w_i * max(0, margin - s_i * (ra_i - rb_i))
+
+The kernel emits the per-pair hinge vector; the (scalar) mean is taken
+in jnp so the custom VJP stays a clean elementwise rule:
+
+    d l_i / d ra_i = -w_i * s_i * [hinge active]      (and +ws for rb).
+
+Single-block kernel: the batch is tiny (TRAIN_B pairs), so one VMEM
+block holds everything — no grid needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hinge_kernel(margin: float, ra_ref, rb_ref, s_ref, w_ref, o_ref):
+    diff = ra_ref[...] - rb_ref[...]
+    o_ref[...] = w_ref[...] * jnp.maximum(0.0, margin - s_ref[...] * diff)
+
+
+def _hinge_raw(ra, rb, sign, weight, margin: float):
+    (n,) = ra.shape
+    return pl.pallas_call(
+        functools.partial(_hinge_kernel, margin),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,))] * 4,
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(ra, rb, sign, weight)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def pairwise_hinge(ra, rb, sign, weight, margin=1.0):
+    """Per-pair weighted hinge vector, differentiable in ra/rb."""
+    return _hinge_raw(ra, rb, sign, weight, margin)
+
+
+def _fwd(ra, rb, sign, weight, margin):
+    out = _hinge_raw(ra, rb, sign, weight, margin)
+    active = (out > 0.0).astype(jnp.float32)
+    return out, (sign, weight, active)
+
+
+def _bwd(margin, res, g):
+    sign, weight, active = res
+    dra = -g * weight * sign * active
+    return dra, -dra, None, None
+
+
+pairwise_hinge.defvjp(_fwd, _bwd)
+
+
+def ranking_loss(ra, rb, sign, weight, margin=1.0):
+    """Mean weighted hinge over the (non-padded) pairs of a batch."""
+    per_pair = pairwise_hinge(ra, rb, sign, weight, margin)
+    return jnp.sum(per_pair) / jnp.maximum(jnp.sum(weight), 1.0)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+pytest (python/tests/) asserts the Pallas implementations match these to
+tight tolerance across shape/dtype sweeps — THE correctness signal for
+layer 1.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w, b, relu=False):
+    out = x @ w + b[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_ref(x, w, b, relu=True):
+    """NHWC SAME conv via lax.conv_general_dilated."""
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b[None, None, None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool2x2_ref(x):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def ranking_loss_ref(ra, rb, sign, weight, margin=1.0):
+    per_pair = weight * jnp.maximum(0.0, margin - sign * (ra - rb))
+    return jnp.sum(per_pair) / jnp.maximum(jnp.sum(weight), 1.0)

@@ -1,0 +1,353 @@
+"""L2: the COGNATE cost model family in JAX (build-time only).
+
+Model variants (all sharing the same AOT signature so the Rust driver is
+variant-agnostic):
+
+* ``cognate``  — full model (Fig 3b): input featurizer (multi-scale conv
+  pyramid), configuration mapper (MLP over the φ/π-mapped homogeneous
+  vector), latent vector z from the per-target autoencoder, MLP
+  predictor.
+* ``noife`` / ``nofm`` / ``nole`` — Fig 7 component ablations (drop the
+  featurizer / configuration mapper / latent encoder respectively).
+* ``tf`` / ``gru`` — Fig 8 predictor ablations (tiny self-attention /
+  gated-recurrent combine instead of the MLP predictor).
+* ``waco_fa`` / ``waco_fm`` — WacoNet baselines: fixed-width featurizer
+  plus a program embedder over the feature-augmented (FA) or
+  feature-mapped (FM) raw config vector; no latent path.
+
+Parameters travel as ONE flat f32 vector (``ravel_pytree``), so the Rust
+runtime manages exactly three mutable buffers (θ, Adam m, Adam v).
+
+Every dense layer and conv goes through the L1 Pallas kernels
+(``matmul_fused`` / ``conv2d``); the ranking loss is the L1 hinge kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import dims
+from .kernels.conv2d import conv2d, global_avg_pool, maxpool2x2
+from .kernels.matmul import matmul_fused
+from .kernels.ranking import ranking_loss
+
+VARIANTS = ("cognate", "noife", "nofm", "nole", "tf", "gru", "waco_fa", "waco_fm")
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _linear_params(key, fan_in, fan_out):
+    wk, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / fan_in)
+    return {
+        "w": jax.random.normal(wk, (fan_in, fan_out), jnp.float32) * scale,
+        "b": jnp.zeros((fan_out,), jnp.float32),
+    }
+
+
+def _conv_params(key, ksize, cin, cout):
+    wk, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / (ksize * ksize * cin))
+    return {
+        "w": jax.random.normal(wk, (ksize, ksize, cin, cout), jnp.float32) * scale,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _mlp_params(key, sizes):
+    keys = jax.random.split(key, len(sizes) - 1)
+    return [_linear_params(k, a, b) for k, a, b in zip(keys, sizes[:-1], sizes[1:])]
+
+
+def _mlp(params, x, final_relu=False):
+    for i, layer in enumerate(params):
+        relu = final_relu or i + 1 < len(params)
+        x = matmul_fused(x, layer["w"], layer["b"], relu)
+    return x
+
+
+def _cfg_dim(variant):
+    return dims.FA_DIM if variant == "waco_fa" else dims.MAPPED_DIM
+
+
+def _uses_featurizer(variant):
+    return variant != "noife"
+
+
+def _uses_mapper(variant):
+    return variant != "nofm"
+
+
+def _uses_latent(variant):
+    return variant not in ("nole", "waco_fa", "waco_fm")
+
+
+def init_params(variant, key):
+    """Parameter pytree for a model variant."""
+    assert variant in VARIANTS, variant
+    keys = jax.random.split(key, 8)
+    p = {}
+    if _uses_featurizer(variant):
+        if variant.startswith("waco"):
+            # WACO: fixed-width stack, single-scale readout.
+            convs = []
+            cin = dims.DMAP_C
+            ck = jax.random.split(keys[0], dims.WACO_LAYERS)
+            for i in range(dims.WACO_LAYERS):
+                ksize = 5 if i == 0 else 3
+                convs.append(_conv_params(ck[i], ksize, cin, dims.WACO_CHANNELS))
+                cin = dims.WACO_CHANNELS
+            p["feat"] = {
+                "convs": convs,
+                "proj": _linear_params(keys[1], dims.WACO_CHANNELS, dims.EMBED_DIM),
+            }
+        else:
+            # COGNATE: rising widths, multi-scale readout (GAP per block).
+            convs = []
+            cin = dims.DMAP_C
+            ck = jax.random.split(keys[0], sum(len(b) for b in dims.FEAT_BLOCKS))
+            ki = 0
+            for bi, block in enumerate(dims.FEAT_BLOCKS):
+                for li, cout in enumerate(block):
+                    ksize = 5 if (bi == 0 and li == 0) else 3
+                    convs.append(_conv_params(ck[ki], ksize, cin, cout))
+                    cin = cout
+                    ki += 1
+            multi = sum(b[-1] for b in dims.FEAT_BLOCKS)
+            p["feat"] = {
+                "convs": convs,
+                "proj": _linear_params(keys[1], multi, dims.EMBED_DIM),
+            }
+    if _uses_mapper(variant):
+        in_dim = _cfg_dim(variant)
+        p["mapper"] = _mlp_params(keys[2], (in_dim, 64, dims.CFG_EMBED))
+    pred_in = 0
+    if _uses_featurizer(variant):
+        pred_in += dims.EMBED_DIM
+    if _uses_mapper(variant):
+        pred_in += dims.CFG_EMBED
+    if _uses_latent(variant):
+        pred_in += dims.LATENT_DIM
+    if variant == "tf":
+        p["tok"] = {
+            "s": _linear_params(keys[3], dims.EMBED_DIM, 64),
+            "p": _linear_params(keys[4], dims.CFG_EMBED, 64),
+            "z": _linear_params(keys[5], dims.LATENT_DIM, 64),
+        }
+        p["attn"] = {
+            "q": _linear_params(jax.random.fold_in(keys[6], 0), 64, 64),
+            "k": _linear_params(jax.random.fold_in(keys[6], 1), 64, 64),
+            "v": _linear_params(jax.random.fold_in(keys[6], 2), 64, 64),
+        }
+        p["pred"] = _mlp_params(keys[7], (64, 64, 1))
+    elif variant == "gru":
+        p["tok"] = {
+            "s": _linear_params(keys[3], dims.EMBED_DIM, 64),
+            "p": _linear_params(keys[4], dims.CFG_EMBED, 64),
+            "z": _linear_params(keys[5], dims.LATENT_DIM, 64),
+        }
+        p["gru"] = {
+            "xz": _linear_params(jax.random.fold_in(keys[6], 0), 64, 64),
+            "hz": _linear_params(jax.random.fold_in(keys[6], 1), 64, 64),
+            "xr": _linear_params(jax.random.fold_in(keys[6], 2), 64, 64),
+            "hr": _linear_params(jax.random.fold_in(keys[6], 3), 64, 64),
+            "xh": _linear_params(jax.random.fold_in(keys[6], 4), 64, 64),
+            "hh": _linear_params(jax.random.fold_in(keys[6], 5), 64, 64),
+        }
+        p["pred"] = _mlp_params(keys[7], (64, 64, 1))
+    else:
+        # MLP predictor (paper Table 6 shape, widened to the concat dim).
+        p["pred"] = _mlp_params(keys[7], (pred_in, 128, 64, 1))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def featurize(variant, params, dmap):
+    """Density map [B, C, H, W] -> matrix embedding s_M [B, EMBED_DIM]."""
+    if not _uses_featurizer(variant):
+        return jnp.zeros((dmap.shape[0], dims.EMBED_DIM), jnp.float32)
+    feat = params["feat"]
+    x = jnp.transpose(dmap, (0, 2, 3, 1))  # NHWC
+    if variant.startswith("waco"):
+        for i, conv in enumerate(feat["convs"]):
+            x = conv2d(x, conv["w"], conv["b"], relu=True)
+            if i % 3 == 2 and x.shape[1] >= 2:
+                x = maxpool2x2(x)
+        readout = global_avg_pool(x)
+    else:
+        scales = []
+        ci = 0
+        for block in dims.FEAT_BLOCKS:
+            for _ in block:
+                conv = feat["convs"][ci]
+                x = conv2d(x, conv["w"], conv["b"], relu=True)
+                ci += 1
+            scales.append(global_avg_pool(x))  # multi-scale readout
+            x = maxpool2x2(x)
+        readout = jnp.concatenate(scales, axis=-1)
+    return matmul_fused(readout, feat["proj"]["w"], feat["proj"]["b"], False)
+
+
+def _head(variant, params, s, cfg, z):
+    """(s_M, mapped-config, latent) -> scalar score per row."""
+    parts = []
+    if _uses_featurizer(variant):
+        parts.append(s)
+    p_vec = None
+    if _uses_mapper(variant):
+        p_vec = _mlp(params["mapper"], cfg)
+        parts.append(p_vec)
+    if _uses_latent(variant):
+        parts.append(z)
+
+    if variant == "tf":
+        toks = jnp.stack(
+            [
+                _mlp([params["tok"]["s"]], s),
+                _mlp([params["tok"]["p"]], p_vec),
+                _mlp([params["tok"]["z"]], z),
+            ],
+            axis=1,
+        )  # [B, 3, 64]
+        b = toks.shape[0]
+        flat = toks.reshape(b * 3, 64)
+        q = _mlp([params["attn"]["q"]], flat).reshape(b, 3, 64)
+        k = _mlp([params["attn"]["k"]], flat).reshape(b, 3, 64)
+        v = _mlp([params["attn"]["v"]], flat).reshape(b, 3, 64)
+        logits = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(64.0)
+        attn = jax.nn.softmax(logits, axis=-1)
+        mixed = jnp.einsum("bts,bsd->btd", attn, v).mean(axis=1)
+        return _mlp(params["pred"], mixed)[:, 0]
+    if variant == "gru":
+        toks = [
+            _mlp([params["tok"]["s"]], s),
+            _mlp([params["tok"]["p"]], p_vec),
+            _mlp([params["tok"]["z"]], z),
+        ]
+        g = params["gru"]
+        h = jnp.zeros_like(toks[0])
+        for x_t in toks:
+            zt = jax.nn.sigmoid(_mlp([g["xz"]], x_t) + _mlp([g["hz"]], h))
+            rt = jax.nn.sigmoid(_mlp([g["xr"]], x_t) + _mlp([g["hr"]], h))
+            ht = jnp.tanh(_mlp([g["xh"]], x_t) + _mlp([g["hh"]], rt * h))
+            h = (1.0 - zt) * h + zt * ht
+        return _mlp(params["pred"], h)[:, 0]
+    return _mlp(params["pred"], jnp.concatenate(parts, axis=-1))[:, 0]
+
+
+def score_cached(variant, params, s, cfg, z):
+    """Score a batch given precomputed matrix embeddings."""
+    return _head(variant, params, s, cfg, z)
+
+
+def score(variant, params, dmap, cfg, z):
+    return _head(variant, params, featurize(variant, params, dmap), cfg, z)
+
+
+# ---------------------------------------------------------------------------
+# Training (Adam, pairwise margin ranking)
+# ---------------------------------------------------------------------------
+
+
+def adam_update(theta, m, v, g, step, lr):
+    m = dims.ADAM_B1 * m + (1.0 - dims.ADAM_B1) * g
+    v = dims.ADAM_B2 * v + (1.0 - dims.ADAM_B2) * g * g
+    mhat = m / (1.0 - dims.ADAM_B1**step)
+    vhat = v / (1.0 - dims.ADAM_B2**step)
+    theta = theta - lr * mhat / (jnp.sqrt(vhat) + dims.ADAM_EPS)
+    return theta, m, v
+
+
+def make_flat_fns(variant):
+    """Build (theta_len, init_flat, featurize_flat, score_cached_flat,
+    train_step_flat) — the flat-θ entry points aot.py lowers."""
+    template = init_params(variant, jax.random.PRNGKey(0))
+    flat0, unravel = ravel_pytree(template)
+    theta_len = flat0.shape[0]
+
+    def init_flat(seed):
+        params = init_params(variant, jax.random.PRNGKey(seed))
+        return (ravel_pytree(params)[0],)
+
+    def featurize_flat(theta, dmap):
+        return (featurize(variant, unravel(theta), dmap),)
+
+    def score_cached_flat(theta, s, cfg, z):
+        return (score_cached(variant, unravel(theta), s, cfg, z),)
+
+    def train_step_flat(theta, m, v, step, dmap, cfg_a, z_a, cfg_b, z_b, sign, weight):
+        def loss_fn(th):
+            params = unravel(th)
+            s = featurize(variant, params, dmap)
+            ra = _head(variant, params, s, cfg_a, z_a)
+            rb = _head(variant, params, s, cfg_b, z_b)
+            return ranking_loss(ra, rb, sign, weight, dims.MARGIN)
+
+        loss, g = jax.value_and_grad(loss_fn)(theta)
+        theta2, m2, v2 = adam_update(theta, m, v, g, step, dims.LR)
+        return theta2, m2, v2, loss
+
+    return theta_len, init_flat, featurize_flat, score_cached_flat, train_step_flat
+
+
+# ---------------------------------------------------------------------------
+# Autoencoders for the heterogeneous component (§3.3, Fig 9)
+# ---------------------------------------------------------------------------
+
+AE_KINDS = ("ae", "vae")
+
+
+def init_ae(kind, key):
+    k1, k2 = jax.random.split(key)
+    enc_out = dims.LATENT_DIM * (2 if kind == "vae" else 1)
+    return {
+        "enc": _mlp_params(k1, (dims.HET_DIM, 32, enc_out)),
+        "dec": _mlp_params(k2, (dims.LATENT_DIM, 32, dims.HET_DIM)),
+    }
+
+
+def ae_encode(kind, params, x):
+    out = _mlp(params["enc"], x)
+    if kind == "vae":
+        return out[:, : dims.LATENT_DIM]  # mean path at inference
+    return out
+
+
+def ae_loss(kind, params, x, eps):
+    out = _mlp(params["enc"], x)
+    if kind == "vae":
+        mu = out[:, : dims.LATENT_DIM]
+        logvar = jnp.clip(out[:, dims.LATENT_DIM :], -8.0, 8.0)
+        zlat = mu + eps * jnp.exp(0.5 * logvar)
+        recon = _mlp(params["dec"], zlat)
+        kl = -0.5 * jnp.mean(1.0 + logvar - mu**2 - jnp.exp(logvar))
+        return jnp.mean((recon - x) ** 2) + 1e-3 * kl
+    recon = _mlp(params["dec"], out)
+    return jnp.mean((recon - x) ** 2)
+
+
+def make_ae_fns(kind):
+    template = init_ae(kind, jax.random.PRNGKey(0))
+    flat0, unravel = ravel_pytree(template)
+    theta_len = flat0.shape[0]
+
+    def init_flat(seed):
+        return (ravel_pytree(init_ae(kind, jax.random.PRNGKey(seed)))[0],)
+
+    def encode_flat(theta, x):
+        return (ae_encode(kind, unravel(theta), x),)
+
+    def train_flat(theta, m, v, step, x, eps):
+        loss, g = jax.value_and_grad(lambda th: ae_loss(kind, unravel(th), x, eps))(theta)
+        theta2, m2, v2 = adam_update(theta, m, v, g, step, dims.AE_LR)
+        return theta2, m2, v2, loss
+
+    return theta_len, init_flat, encode_flat, train_flat

@@ -1,0 +1,178 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv2d import conv2d, global_avg_pool, im2col, maxpool2x2
+from compile.kernels.matmul import matmul_fused
+from compile.kernels.ranking import pairwise_hinge, ranking_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (4, 7, 9), (128, 64, 128), (130, 72, 257), (8, 1152, 16)])
+@pytest.mark.parametrize("relu", [False, True])
+def test_matmul_matches_ref(m, k, n, relu):
+    x, w, b = rnd(0, m, k), rnd(1, k, n), rnd(2, n)
+    got = matmul_fused(x, w, b, relu)
+    want = ref.matmul_ref(x, w, b, relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 96),
+    n=st.integers(1, 150),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_sweep(m, k, n, relu, seed):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.uniform(kx, (m, k), jnp.float32, -2.0, 2.0)
+    w = jax.random.uniform(kw, (k, n), jnp.float32, -2.0, 2.0)
+    b = jax.random.uniform(kb, (n,), jnp.float32, -2.0, 2.0)
+    np.testing.assert_allclose(
+        matmul_fused(x, w, b, relu), ref.matmul_ref(x, w, b, relu), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_matmul_grads_match_ref(relu):
+    x, w, b = rnd(3, 17, 23), rnd(4, 23, 11), rnd(5, 11)
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(matmul_fused(x, w, b, relu) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.matmul_ref(x, w, b, relu) ** 2)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gp, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_under_jit():
+    x, w, b = rnd(6, 33, 8), rnd(7, 8, 5), rnd(8, 5)
+    got = jax.jit(lambda x: matmul_fused(x, w, b, True))(x)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w, b, True), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# conv2d / pooling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ksize", [3, 5])
+@pytest.mark.parametrize("cin,cout", [(1, 4), (4, 8), (8, 16)])
+def test_conv2d_matches_ref(ksize, cin, cout):
+    x = rnd(10, 2, 16, 16, cin)
+    w = rnd(11, ksize, ksize, cin, cout) * 0.3
+    b = rnd(12, cout) * 0.1
+    got = conv2d(x, w, b, relu=True)
+    want = ref.conv2d_ref(x, w, b, relu=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.sampled_from([4, 8, 12]),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    ksize=st.sampled_from([3, 5]),
+    seed=st.integers(0, 1000),
+)
+def test_conv2d_hypothesis_sweep(h, cin, cout, ksize, seed):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k0, (1, h, h, cin), jnp.float32)
+    w = jax.random.normal(k1, (ksize, ksize, cin, cout), jnp.float32) * 0.2
+    b = jax.random.normal(k2, (cout,), jnp.float32) * 0.1
+    np.testing.assert_allclose(
+        conv2d(x, w, b, False), ref.conv2d_ref(x, w, b, False), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_conv2d_grad_matches_ref():
+    x = rnd(13, 1, 8, 8, 3)
+    w = rnd(14, 3, 3, 3, 5) * 0.3
+    b = jnp.zeros(5)
+    gp = jax.grad(lambda w: jnp.sum(conv2d(x, w, b, True) ** 2))(w)
+    gr = jax.grad(lambda w: jnp.sum(ref.conv2d_ref(x, w, b, True) ** 2))(w)
+    np.testing.assert_allclose(gp, gr, rtol=1e-3, atol=1e-3)
+
+
+def test_im2col_center_shift_identity():
+    # The centre shift of im2col is the input itself.
+    x = rnd(15, 1, 6, 6, 2)
+    patches = im2col(x, 3)
+    centre = patches[..., 4 * 2 : 5 * 2]  # shift (dy=1, dx=1), cin=2
+    np.testing.assert_allclose(centre, x)
+
+
+def test_maxpool_matches_ref():
+    x = rnd(16, 3, 8, 8, 4)
+    np.testing.assert_allclose(maxpool2x2(x), ref.maxpool2x2_ref(x))
+
+
+def test_global_avg_pool():
+    x = jnp.ones((2, 4, 4, 3)) * jnp.arange(1.0, 4.0)[None, None, None, :]
+    np.testing.assert_allclose(global_avg_pool(x), jnp.tile(jnp.arange(1.0, 4.0), (2, 1)))
+
+
+# ---------------------------------------------------------------------------
+# ranking loss
+# ---------------------------------------------------------------------------
+
+
+def test_ranking_matches_ref():
+    ra, rb = rnd(20, 16), rnd(21, 16)
+    sign = jnp.sign(rnd(22, 16))
+    weight = (rnd(23, 16) > 0).astype(jnp.float32)
+    got = ranking_loss(ra, rb, sign, weight, 1.0)
+    want = ref.ranking_loss_ref(ra, rb, sign, weight, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_ranking_grad_matches_ref():
+    ra, rb = rnd(24, 12), rnd(25, 12)
+    sign = jnp.sign(rnd(26, 12))
+    weight = jnp.ones(12)
+    gp = jax.grad(lambda a, b: ranking_loss(a, b, sign, weight, 1.0), argnums=(0, 1))(ra, rb)
+    gr = jax.grad(lambda a, b: ref.ranking_loss_ref(a, b, sign, weight, 1.0), argnums=(0, 1))(
+        ra, rb
+    )
+    for a, e in zip(gp, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-6, atol=1e-6)
+
+
+def test_ranking_padded_rows_no_gradient():
+    ra, rb = rnd(27, 8), rnd(28, 8)
+    sign = jnp.ones(8)
+    weight = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    g = jax.grad(lambda a: ranking_loss(a, rb, sign, weight, 1.0))(ra)
+    assert np.all(np.asarray(g[4:]) == 0.0), "padded pairs must not leak gradient"
+
+
+def test_hinge_satisfied_pairs_zero():
+    # Well-separated in the right direction → zero loss.
+    ra = jnp.array([5.0, -5.0])
+    rb = jnp.array([0.0, 0.0])
+    sign = jnp.array([1.0, -1.0])
+    w = jnp.ones(2)
+    assert float(ranking_loss(ra, rb, sign, w, 1.0)) == 0.0
+    per = pairwise_hinge(ra, rb, sign, w, 1.0)
+    np.testing.assert_allclose(per, jnp.zeros(2))

@@ -1,0 +1,87 @@
+"""Manifest ↔ dims consistency: the contract between aot.py and the
+Rust runtime. Runs against artifacts/ if present (made by `make
+artifacts`); otherwise validates the spec-generation logic in-process.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import dims, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ARTIFACTS, "manifest.json")
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+def test_manifest_matches_dims():
+    m = json.load(open(MANIFEST))
+    d = m["dims"]
+    assert d["DMAP_C"] == dims.DMAP_C
+    assert d["DMAP_H"] == dims.DMAP_H
+    assert d["DMAP_W"] == dims.DMAP_W
+    assert d["MAPPED_DIM"] == dims.MAPPED_DIM == 53
+    assert d["HET_DIM"] == dims.HET_DIM
+    assert d["FA_DIM"] == dims.FA_DIM
+    assert d["LATENT_DIM"] == dims.LATENT_DIM
+    assert d["TRAIN_B"] == dims.TRAIN_B
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+def test_manifest_covers_all_variants_and_files_exist():
+    m = json.load(open(MANIFEST))
+    for v in model.VARIANTS:
+        assert v in m["theta_len"], f"missing theta_len for {v}"
+        for entry in ("init", "featurize", "score_cached", "train"):
+            name = f"{v}_{entry}"
+            assert name in m["artifacts"], f"missing artifact {name}"
+            f = m["artifacts"][name]["file"]
+            assert os.path.exists(os.path.join(ARTIFACTS, f)), f"missing file {f}"
+    for kind in model.AE_KINDS:
+        for entry in ("init", "encode", "train"):
+            assert f"{kind}_{entry}" in m["artifacts"]
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+def test_manifest_shapes_match_model():
+    m = json.load(open(MANIFEST))
+    for v in model.VARIANTS:
+        theta_len = model.make_flat_fns(v)[0]
+        assert m["theta_len"][v] == theta_len, f"theta_len drift for {v}"
+        tr = m["artifacts"][f"{v}_train"]
+        # θ in, θ out, same length; loss scalar last.
+        assert tr["inputs"][0]["shape"] == [theta_len]
+        assert tr["outputs"][0]["shape"] == [theta_len]
+        assert tr["outputs"][-1]["shape"] == []
+        cfg_dim = dims.FA_DIM if v == "waco_fa" else dims.MAPPED_DIM
+        assert tr["inputs"][5]["shape"] == [dims.TRAIN_B, cfg_dim]
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+def test_hlo_text_artifacts_are_parseable_hlo():
+    m = json.load(open(MANIFEST))
+    # Spot-check: files are non-trivial HLO text with an ENTRY computation.
+    for name in ("cognate_train", "ae_encode", "waco_fa_score_cached"):
+        path = os.path.join(ARTIFACTS, m["artifacts"][name]["file"])
+        text = open(path).read()
+        assert "ENTRY" in text, f"{name} does not look like HLO text"
+        assert "f32" in text
+
+
+def test_train_step_consumes_all_inputs_even_when_unused():
+    """Regression for the dropped-parameter bug: lowering must keep
+    unused inputs (e.g. eps in the plain AE) in the HLO signature."""
+    from compile.aot import to_hlo_text
+
+    def fn(a, b):  # b unused
+        return (a * 2.0,)
+
+    spec = jax.ShapeDtypeStruct((4,), jnp.float32)
+    lowered = jax.jit(fn, keep_unused=True).lower(spec, spec)
+    text = to_hlo_text(lowered)
+    # Both parameters present in the entry signature.
+    assert text.count("parameter(0)") == 1
+    assert text.count("parameter(1)") == 1

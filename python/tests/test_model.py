@@ -1,0 +1,157 @@
+"""L2 model tests: shapes, training-step behaviour, variant semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dims, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def flat_fns(variant):
+    """make_flat_fns with every entry point jitted (mirrors AOT usage —
+    eager interpret-mode Pallas is orders of magnitude slower)."""
+    theta_len, init_f, feat_f, scorec_f, train_f = model.make_flat_fns(variant)
+    return (theta_len, jax.jit(init_f), jax.jit(feat_f), jax.jit(scorec_f), jax.jit(train_f))
+
+
+@functools.lru_cache(maxsize=None)
+def ae_fns(kind):
+    theta_len, init_f, enc_f, train_f = model.make_ae_fns(kind)
+    return (theta_len, jax.jit(init_f), jax.jit(enc_f), jax.jit(train_f))
+
+
+def batch(variant, b, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    cfg_dim = dims.FA_DIM if variant == "waco_fa" else dims.MAPPED_DIM
+    return {
+        "dmap": jax.random.uniform(ks[0], (b, dims.DMAP_C, dims.DMAP_H, dims.DMAP_W)),
+        "cfg_a": jax.random.uniform(ks[1], (b, cfg_dim)),
+        "z_a": jax.random.normal(ks[2], (b, dims.LATENT_DIM)),
+        "cfg_b": jax.random.uniform(ks[3], (b, cfg_dim)),
+        "z_b": jax.random.normal(ks[4], (b, dims.LATENT_DIM)),
+        "sign": jnp.sign(jax.random.normal(ks[5], (b,))),
+        "weight": jnp.ones((b,)),
+    }
+
+
+@pytest.mark.parametrize("variant", model.VARIANTS)
+def test_shapes_all_variants(variant):
+    theta_len, init_f, feat_f, scorec_f, _ = flat_fns(variant)
+    (theta,) = init_f(0)
+    assert theta.shape == (theta_len,)
+    assert bool(jnp.all(jnp.isfinite(theta)))
+    b = batch(variant, dims.FEAT_B)
+    (s,) = feat_f(theta, b["dmap"])
+    assert s.shape == (dims.FEAT_B, dims.EMBED_DIM)
+    bb = batch(variant, dims.SCORE_B)
+    s_big = jnp.tile(s[:1], (dims.SCORE_B, 1))
+    (scores,) = scorec_f(theta, s_big, bb["cfg_a"], bb["z_a"])
+    assert scores.shape == (dims.SCORE_B,)
+    assert bool(jnp.all(jnp.isfinite(scores)))
+
+
+@pytest.mark.parametrize("variant", ["cognate", "waco_fm"])
+def test_train_step_decreases_loss(variant):
+    theta_len, init_f, _, _, train_f = flat_fns(variant)
+    (theta,) = init_f(1)
+    m = jnp.zeros(theta_len)
+    v = jnp.zeros(theta_len)
+    b = batch(variant, dims.TRAIN_B, seed=7)
+    losses = []
+    for step in range(1, 16):
+        theta, m, v, loss = train_f(
+            theta, m, v, jnp.float32(step), b["dmap"], b["cfg_a"], b["z_a"],
+            b["cfg_b"], b["z_b"], b["sign"], b["weight"],
+        )
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], f"no learning: {losses[0]} -> {losses[-1]}"
+
+
+def test_init_seed_sensitivity():
+    _, init_f, _, _, _ = flat_fns("cognate")
+    (t0,) = init_f(0)
+    (t0b,) = init_f(0)
+    (t1,) = init_f(1)
+    np.testing.assert_allclose(t0, t0b)
+    assert not np.allclose(t0, t1)
+
+
+def test_noife_ignores_dmap():
+    # Without the input featurizer, scores cannot depend on the matrix.
+    theta_len, init_f, feat_f, scorec_f, _ = flat_fns("noife")
+    (theta,) = init_f(3)
+    b1 = batch("noife", dims.FEAT_B, seed=1)
+    b2 = batch("noife", dims.FEAT_B, seed=2)
+    (s1,) = feat_f(theta, b1["dmap"])
+    (s2,) = feat_f(theta, b2["dmap"])
+    np.testing.assert_allclose(s1, s2)  # both zero
+
+
+def test_nole_ignores_latent():
+    theta_len, init_f, feat_f, scorec_f, _ = flat_fns("nole")
+    (theta,) = init_f(4)
+    b = batch("nole", dims.SCORE_B, seed=5)
+    s = jnp.zeros((dims.SCORE_B, dims.EMBED_DIM))
+    (r1,) = scorec_f(theta, s, b["cfg_a"], b["z_a"])
+    (r2,) = scorec_f(theta, s, b["cfg_a"], b["z_b"])
+    np.testing.assert_allclose(r1, r2)
+
+
+def test_cognate_uses_all_inputs():
+    theta_len, init_f, feat_f, scorec_f, _ = flat_fns("cognate")
+    (theta,) = init_f(5)
+    b = batch("cognate", dims.SCORE_B, seed=6)
+    s = jax.random.normal(jax.random.PRNGKey(8), (dims.SCORE_B, dims.EMBED_DIM))
+    (r0,) = scorec_f(theta, s, b["cfg_a"], b["z_a"])
+    (r_cfg,) = scorec_f(theta, s, b["cfg_b"], b["z_a"])
+    (r_z,) = scorec_f(theta, s, b["cfg_a"], b["z_b"])
+    (r_s,) = scorec_f(theta, s * 2.0, b["cfg_a"], b["z_a"])
+    assert not np.allclose(r0, r_cfg)
+    assert not np.allclose(r0, r_z)
+    assert not np.allclose(r0, r_s)
+
+
+def test_featurize_distinguishes_matrices():
+    _, init_f, feat_f, _, _ = flat_fns("cognate")
+    (theta,) = init_f(6)
+    d1 = jax.random.uniform(jax.random.PRNGKey(1), (dims.FEAT_B, dims.DMAP_C, dims.DMAP_H, dims.DMAP_W))
+    (s,) = feat_f(theta, d1)
+    # distinct rows for distinct maps
+    assert not np.allclose(s[0], s[1])
+
+
+@pytest.mark.parametrize("kind", model.AE_KINDS)
+def test_autoencoder_learns_reconstruction(kind):
+    theta_len, init_f, enc_f, train_f = ae_fns(kind)
+    (theta,) = init_f(0)
+    m = jnp.zeros(theta_len)
+    v = jnp.zeros(theta_len)
+    key = jax.random.PRNGKey(9)
+    # Binary-ish het vectors like the real encoding.
+    x = (jax.random.uniform(key, (dims.SCORE_B, dims.HET_DIM)) > 0.5).astype(jnp.float32)
+    first = None
+    loss = None
+    for step in range(1, 121):
+        eps = jax.random.normal(jax.random.fold_in(key, step), (dims.SCORE_B, dims.LATENT_DIM))
+        theta, m, v, loss = train_f(theta, m, v, jnp.float32(step), x, eps)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.5, f"{kind}: {first} -> {float(loss)}"
+    (z,) = enc_f(theta, x)
+    assert z.shape == (dims.SCORE_B, dims.LATENT_DIM)
+    assert bool(jnp.all(jnp.isfinite(z)))
+
+
+def test_theta_lengths_differ_across_variants():
+    lens = {v: model.make_flat_fns(v)[0] for v in ("cognate", "noife", "waco_fa")}
+    assert lens["cognate"] != lens["noife"]
+    assert len(set(lens.values())) == 3

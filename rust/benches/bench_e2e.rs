@@ -1,0 +1,55 @@
+//! End-to-end mini-pipeline wall-clock (fig4-shaped, micro scale):
+//! datasets + AE + pretrain + finetune + eval in one number. Requires
+//! `make artifacts`.
+use cognate::config::PlatformId;
+use cognate::coordinator::{Pipeline, Scale};
+use cognate::kernels::Op;
+use cognate::model::ModelDriver;
+use cognate::search::evaluate;
+use cognate::train::{train, TrainOpts};
+use std::time::Instant;
+
+fn main() {
+    let mut s = Scale::small();
+    s.per_cell = 1;
+    s.max_dim = 512;
+    s.pretrain_matrices = 8;
+    s.eval_matrices = 6;
+    s.pretrain_opts = TrainOpts { epochs: 2, batches_per_epoch: 8, val_matrices: 0, ..TrainOpts::default() };
+    s.finetune_opts = TrainOpts { epochs: 1, batches_per_epoch: 6, val_matrices: 0, ..TrainOpts::default() };
+    s.ae_steps = 40;
+    s.seed = 0xE2E;
+    let t0 = Instant::now();
+    let mut pipe = Pipeline::new(s).expect("make artifacts first");
+    pipe.results_dir = std::env::temp_dir().join("cognate_bench_e2e");
+    let op = Op::Spmm;
+    let src = pipe.dataset(PlatformId::Cpu, op).unwrap();
+    let tgt = pipe.dataset(PlatformId::Spade, op).unwrap();
+    let t_data = t0.elapsed();
+    let z_src = pipe.trained_ae(PlatformId::Cpu, "ae", 1).unwrap();
+    let z_tgt = pipe.trained_ae(PlatformId::Spade, "ae", 2).unwrap();
+    let t_ae = t0.elapsed();
+    let (pool, _) = pipe.splits(&src);
+    let idx = pipe.pretrain_subset(&src, &pool, pipe.scale.pretrain_matrices);
+    let mut driver = ModelDriver::init(pipe.rt.clone(), "cognate", 0).unwrap();
+    train(&mut driver, &z_src, &src, &idx, &[], &pipe.scale.pretrain_opts.clone()).unwrap();
+    let t_pre = t0.elapsed();
+    let (tpool, eval_idx) = pipe.splits(&tgt);
+    let ft: Vec<usize> = tpool.into_iter().take(3).collect();
+    let mut tuned = driver.fork_for_finetune();
+    train(&mut tuned, &z_tgt, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone()).unwrap();
+    let t_ft = t0.elapsed();
+    let di = cognate::config::default_config_index(PlatformId::Spade);
+    let s5 = evaluate(&tuned, &z_tgt, &tgt, &eval_idx, di, 5).unwrap();
+    let t_all = t0.elapsed();
+    println!(
+        "bench e2e: datasets {:.1}s | ae +{:.1}s | pretrain +{:.1}s | finetune +{:.1}s | eval +{:.1}s | total {:.1}s | top5 geomean {:.3}",
+        t_data.as_secs_f64(),
+        (t_ae - t_data).as_secs_f64(),
+        (t_pre - t_ae).as_secs_f64(),
+        (t_ft - t_pre).as_secs_f64(),
+        (t_all - t_ft).as_secs_f64(),
+        t_all.as_secs_f64(),
+        s5.geomean_speedup
+    );
+}

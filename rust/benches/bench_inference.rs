@@ -1,0 +1,37 @@
+//! PJRT inference hot path (the search loop): featurize + score-256,
+//! per batch width — the latency behind `cognate serve` and top-k
+//! search. Requires `make artifacts`.
+use cognate::model::ModelDriver;
+use cognate::runtime::{artifacts_dir, Runtime};
+use cognate::util::bench::bench;
+use cognate::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let rt = Arc::new(Runtime::load(&artifacts_dir()).expect("make artifacts first"));
+    let d = ModelDriver::init(rt.clone(), "cognate", 0).unwrap();
+    let mut rng = Rng::new(1);
+    let dmaps: Vec<Vec<f32>> =
+        (0..4).map(|_| (0..d.dmap_len()).map(|_| rng.next_f32()).collect()).collect();
+    let refs1: Vec<&[f32]> = dmaps[..1].iter().map(|v| v.as_slice()).collect();
+    let refs4: Vec<&[f32]> = dmaps.iter().map(|v| v.as_slice()).collect();
+
+    bench("featurize/batch1", 2, 30, 8.0, || {
+        let _ = d.featurize(&refs1).unwrap();
+    })
+    .report();
+    bench("featurize/batch4", 2, 30, 8.0, || {
+        let _ = d.featurize(&refs4).unwrap();
+    })
+    .report_throughput(4.0, "matrix");
+
+    let s = d.featurize(&refs1).unwrap().remove(0);
+    for &n in &[64usize, 256] {
+        let cfgs: Vec<f32> = (0..n * d.cfg_dim).map(|_| rng.next_f32()).collect();
+        let zs: Vec<f32> = (0..n * d.latent_dim()).map(|_| rng.next_f32()).collect();
+        bench(&format!("score/{n}cfg"), 2, 30, 8.0, || {
+            let _ = d.score_configs(&s, &cfgs, &zs).unwrap();
+        })
+        .report_throughput(n as f64, "cfg");
+    }
+}

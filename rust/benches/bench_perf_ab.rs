@@ -1,0 +1,43 @@
+//! §Perf A/B harness: same train/featurize/score benches against the
+//! artifacts directory named in COGNATE_ARTIFACTS — used to compare
+//! candidate kernel schedules (e.g. COGNATE_BLOCK_M) against baseline.
+use cognate::model::{ModelDriver, TrainBatch};
+use cognate::runtime::{artifacts_dir, Runtime};
+use cognate::util::bench::bench;
+use cognate::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let dir = artifacts_dir();
+    println!("artifacts: {dir:?}");
+    let rt = Arc::new(Runtime::load(&dir).expect("artifacts missing"));
+    let mut d = ModelDriver::init(rt.clone(), "cognate", 0).unwrap();
+    let mut rng = Rng::new(7);
+    let b = d.train_b();
+    let mk = |n: usize, rng: &mut Rng| (0..n).map(|_| rng.next_f32()).collect::<Vec<_>>();
+    let batch = TrainBatch {
+        dmap: mk(b * d.dmap_len(), &mut rng),
+        cfg_a: mk(b * d.cfg_dim, &mut rng),
+        z_a: mk(b * d.latent_dim(), &mut rng),
+        cfg_b: mk(b * d.cfg_dim, &mut rng),
+        z_b: mk(b * d.latent_dim(), &mut rng),
+        sign: vec![1.0; b],
+        weight: vec![1.0; b],
+    };
+    bench("train_step/cognate", 2, 15, 20.0, || {
+        let _ = d.train_step(&batch).unwrap();
+    })
+    .report();
+    let dmap: Vec<f32> = mk(d.dmap_len(), &mut rng);
+    bench("featurize/batch1", 2, 15, 10.0, || {
+        let _ = d.featurize(&[&dmap]).unwrap();
+    })
+    .report();
+    let s = d.featurize(&[&dmap]).unwrap().remove(0);
+    let cfgs: Vec<f32> = mk(256 * d.cfg_dim, &mut rng);
+    let zs: Vec<f32> = mk(256 * d.latent_dim(), &mut rng);
+    bench("score/256cfg", 2, 15, 10.0, || {
+        let _ = d.score_configs(&s, &cfgs, &zs).unwrap();
+    })
+    .report();
+}

@@ -1,0 +1,29 @@
+//! Simulator throughput: full-config-space evaluations per second per
+//! platform — the quantity that replaces the paper's "two weeks per
+//! SPADE sample" (Table 2's β ratios are modelled, not re-measured).
+use cognate::kernels::Op;
+use cognate::platform::{cpu::CpuSim, gpu::GpuSim, spade::SpadeSim, CostModel};
+use cognate::sparse::gen::{generate, Family};
+use cognate::util::bench::{bench, black_box};
+
+fn main() {
+    let m = generate(Family::Rmat, 2000, 2000, 0.01, 7);
+    println!("matrix: {}x{} nnz={}", m.rows, m.cols, m.nnz());
+    let cpu = CpuSim::new();
+    let spade = SpadeSim::new();
+    let gpu = GpuSim::new();
+    for op in [Op::Spmm, Op::Sddmm] {
+        bench(&format!("cpu.eval_all[1024cfg]/{}", op.name()), 1, 20, 5.0, || {
+            black_box(cpu.eval_all(&m, op));
+        })
+        .report_throughput(1024.0, "cfg");
+        bench(&format!("spade.eval_all[256cfg]/{}", op.name()), 1, 20, 5.0, || {
+            black_box(spade.eval_all(&m, op));
+        })
+        .report_throughput(256.0, "cfg");
+        bench(&format!("gpu.eval_all[288cfg]/{}", op.name()), 1, 20, 5.0, || {
+            black_box(gpu.eval_all(&m, op));
+        })
+        .report_throughput(288.0, "cfg");
+    }
+}

@@ -1,0 +1,57 @@
+//! Substrate hot paths: executable SpMM/SDDMM kernels (GFLOP/s),
+//! density-map featurization, reordering, tile-grid construction.
+use cognate::kernels::{sddmm_scheduled, spmm_scheduled, SddmmSchedule, SpmmSchedule};
+use cognate::platform::tiles::tile_grid;
+use cognate::sparse::features::density_map;
+use cognate::sparse::gen::{generate, Family};
+use cognate::sparse::reorder::{apply, Reorder};
+use cognate::util::bench::{bench, black_box};
+use cognate::util::rng::Rng;
+
+fn main() {
+    let m = generate(Family::Rmat, 4000, 4000, 0.005, 3);
+    let n = 128usize;
+    let mut rng = Rng::new(1);
+    let b: Vec<f32> = (0..m.cols * n).map(|_| rng.next_f32()).collect();
+    let mut out = vec![0f32; m.rows * n];
+    let flops = 2.0 * m.nnz() as f64 * n as f64 / 1e9;
+    println!("matrix {}x{} nnz={} dense_n={n}", m.rows, m.cols, m.nnz());
+
+    for (name, s) in [
+        ("spmm/default", SpmmSchedule::default()),
+        ("spmm/tuned-i16-k128", SpmmSchedule { i_block: 16, k_block: 128, outer_k: false }),
+        ("spmm/outer-k", SpmmSchedule { i_block: 64, k_block: 32, outer_k: true }),
+    ] {
+        let r = bench(name, 1, 10, 4.0, || {
+            spmm_scheduled(&m, &b, n, s, &mut out);
+            black_box(&out);
+        });
+        println!("  -> {:.2} GFLOP/s", flops / r.mean_s);
+        r.report();
+    }
+
+    let bd: Vec<f32> = (0..m.rows * n).map(|_| rng.next_f32()).collect();
+    let mut dv = vec![0f32; m.nnz()];
+    bench("sddmm/default", 1, 10, 4.0, || {
+        sddmm_scheduled(&m, &bd, &b, n, SddmmSchedule::default(), &mut dv);
+        black_box(&dv);
+    })
+    .report();
+
+    bench("density_map[32x32x4]", 1, 50, 3.0, || {
+        black_box(density_map(&m));
+    })
+    .report();
+    bench("reorder/degree", 1, 20, 3.0, || {
+        black_box(apply(&m, Reorder::DegreeDesc));
+    })
+    .report();
+    bench("reorder/rcm", 1, 10, 3.0, || {
+        black_box(apply(&m, Reorder::Rcm));
+    })
+    .report();
+    bench("tile_grid[32x16384]", 1, 30, 3.0, || {
+        black_box(tile_grid(&m, 32, 16384));
+    })
+    .report();
+}

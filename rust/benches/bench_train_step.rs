@@ -1,0 +1,30 @@
+//! Training-step latency per model variant (the pre-training /
+//! fine-tuning throughput). Requires `make artifacts`.
+use cognate::model::{ModelDriver, TrainBatch};
+use cognate::runtime::{artifacts_dir, Runtime};
+use cognate::util::bench::bench;
+use cognate::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let rt = Arc::new(Runtime::load(&artifacts_dir()).expect("make artifacts first"));
+    for variant in ["cognate", "noife", "waco_fm", "tf"] {
+        let mut d = ModelDriver::init(rt.clone(), variant, 0).unwrap();
+        let mut rng = Rng::new(7);
+        let b = d.train_b();
+        let mk = |n: usize, rng: &mut Rng| (0..n).map(|_| rng.next_f32()).collect::<Vec<_>>();
+        let batch = TrainBatch {
+            dmap: mk(b * d.dmap_len(), &mut rng),
+            cfg_a: mk(b * d.cfg_dim, &mut rng),
+            z_a: mk(b * d.latent_dim(), &mut rng),
+            cfg_b: mk(b * d.cfg_dim, &mut rng),
+            z_b: mk(b * d.latent_dim(), &mut rng),
+            sign: vec![1.0; b],
+            weight: vec![1.0; b],
+        };
+        bench(&format!("train_step/{variant}"), 2, 20, 10.0, || {
+            let _ = d.train_step(&batch).unwrap();
+        })
+        .report_throughput(b as f64, "pair");
+    }
+}

@@ -1,0 +1,83 @@
+//! Baseline pipelines the paper compares against (Figs 2 & 4):
+//!
+//! * **zero-shot** — the CPU-pre-trained model applied to the target
+//!   with no fine-tuning;
+//! * **no-transfer** — a fresh model trained only on the (few) target
+//!   samples the fine-tuning budget allows;
+//! * **WACO+FA / WACO+FM** — WacoNet with feature augmentation /
+//!   feature mapping, pre-trained and fine-tuned like COGNATE.
+//!
+//! Each returns the same `EvalSummary`, so experiment code treats all
+//! methods uniformly.
+
+use crate::dataset::Dataset;
+use crate::model::ModelDriver;
+use crate::runtime::Runtime;
+use crate::search::{evaluate, EvalSummary};
+use crate::train::{train, TrainOpts, ZEncoder};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Everything a method needs to produce an EvalSummary.
+pub struct MethodCtx<'a> {
+    pub rt: Arc<Runtime>,
+    /// Source-platform dataset (CPU) and its training matrices.
+    pub source_ds: &'a Dataset,
+    pub source_train_idx: &'a [usize],
+    /// Target-platform dataset, its few-shot matrices and eval split.
+    pub target_ds: &'a Dataset,
+    pub finetune_idx: &'a [usize],
+    pub eval_idx: &'a [usize],
+    pub default_index: usize,
+    pub pretrain_opts: TrainOpts,
+    pub finetune_opts: TrainOpts,
+    pub seed: i32,
+}
+
+/// Pre-train a variant on the source platform. Returns the driver so
+/// several methods can share one pre-training run.
+pub fn pretrain_source(
+    ctx: &MethodCtx,
+    variant: &str,
+    zenc: &ZEncoder,
+) -> Result<ModelDriver> {
+    let mut driver = ModelDriver::init(ctx.rt.clone(), variant, ctx.seed)?;
+    let val: Vec<usize> = Vec::new();
+    train(&mut driver, zenc, ctx.source_ds, ctx.source_train_idx, &val, &ctx.pretrain_opts)?;
+    Ok(driver)
+}
+
+/// Fine-tune a pre-trained driver on the target and evaluate top-k.
+pub fn finetune_and_eval(
+    ctx: &MethodCtx,
+    pre: &ModelDriver,
+    zenc: &ZEncoder,
+    k: usize,
+) -> Result<EvalSummary> {
+    let mut driver = pre.fork_for_finetune();
+    let val: Vec<usize> = Vec::new();
+    train(&mut driver, zenc, ctx.target_ds, ctx.finetune_idx, &val, &ctx.finetune_opts)?;
+    evaluate(&driver, zenc, ctx.target_ds, ctx.eval_idx, ctx.default_index, k)
+}
+
+/// Zero-shot: apply the source-trained model directly to the target.
+pub fn zero_shot(ctx: &MethodCtx, pre: &ModelDriver, zenc: &ZEncoder, k: usize) -> Result<EvalSummary> {
+    evaluate(pre, zenc, ctx.target_ds, ctx.eval_idx, ctx.default_index, k)
+}
+
+/// No-transfer: train from scratch on the fine-tuning matrices only.
+pub fn no_transfer(
+    ctx: &MethodCtx,
+    variant: &str,
+    zenc: &ZEncoder,
+    k: usize,
+) -> Result<EvalSummary> {
+    let mut driver = ModelDriver::init(ctx.rt.clone(), variant, ctx.seed + 17)?;
+    let val: Vec<usize> = Vec::new();
+    // Same number of optimisation steps as pretrain+finetune would give
+    // the transfer models on this data volume.
+    let mut opts = ctx.finetune_opts.clone();
+    opts.epochs = ctx.finetune_opts.epochs + ctx.pretrain_opts.epochs / 2;
+    train(&mut driver, zenc, ctx.target_ds, ctx.finetune_idx, &val, &opts)?;
+    evaluate(&driver, zenc, ctx.target_ds, ctx.eval_idx, ctx.default_index, k)
+}

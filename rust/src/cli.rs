@@ -1,0 +1,315 @@
+//! Hand-rolled CLI (no `clap` offline). Subcommands:
+//!
+//!   cognate gen        [--scale N]                 generate + describe the collection
+//!   cognate collect    [--platform P] [--op O]     collect datasets into results/cache
+//!   cognate pretrain   [--op O] [--variant V]      pre-train on CPU, save θ
+//!   cognate experiment <id|all> [--scale N]        regenerate paper tables/figures
+//!   cognate search     [--op O] [--target P]       tune one synthetic matrix end to end
+//!   cognate serve      [--addr A]                  run the auto-tuning service
+//!   cognate bench-sim                              quick simulator throughput check
+
+use crate::config::PlatformId;
+use crate::coordinator::{experiments, Pipeline, Scale};
+use crate::kernels::Op;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+pub fn parse(argv: &[String]) -> Result<Args> {
+    if argv.is_empty() {
+        bail!("usage: cognate <command> [args] — see `cognate help`");
+    }
+    let cmd = argv[0].clone();
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(Args { cmd, positional, flags })
+}
+
+impl Args {
+    pub fn flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+    pub fn flag_usize(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+    pub fn scale(&self) -> Scale {
+        Scale::scaled(self.flag_usize("scale", 1))
+    }
+    pub fn op(&self) -> Result<Op> {
+        Op::parse(&self.flag("op", "spmm")).context("bad --op (spmm|sddmm)")
+    }
+    pub fn platform(&self, flag: &str, default: &str) -> Result<PlatformId> {
+        PlatformId::parse(&self.flag(flag, default)).context("bad platform (cpu|spade|gpu)")
+    }
+}
+
+pub const HELP: &str = "\
+cognate — COGNATE (ICML'25) reproduction: transfer-learned cost models
+for sparse tensor programs on emerging hardware.
+
+USAGE: cognate <command> [--flags]
+
+COMMANDS
+  gen         [--scale N]                      generate + summarise the matrix collection
+  pretrain    [--op O] [--variant V] [--out ckpt] [--scale N]
+                                               pre-train on CPU, write a checkpoint
+  finetune    --ckpt FILE [--target P] [--op O] [--out ckpt2]
+                                               few-shot fine-tune a checkpoint
+  eval        --ckpt FILE [--target P] [--op O] [--k K]
+                                               evaluate a checkpoint (top-k speedups)
+  roofline    [--block-m 1024] [--block-n 128]  TPU MXU/VMEM estimates for the L1 kernels
+  collect     [--platform cpu|spade|gpu] [--op spmm|sddmm] [--scale N]
+                                               collect a performance dataset (cached)
+  experiment  <table1|fig2|fig4|...|all> [--scale N]
+                                               regenerate a paper table/figure
+  search      [--op O] [--target P] [--k K] [--scale N]
+                                               tune one synthetic matrix end to end
+  serve       [--addr 127.0.0.1:7199] [--target P] [--op O] [--scale N]
+                                               run the batched auto-tuning service
+  help                                         this text
+
+Artifacts must exist (run `make artifacts`); set COGNATE_ARTIFACTS to
+override the ./artifacts directory.";
+
+pub fn main_inner(argv: &[String]) -> Result<()> {
+    let args = parse(argv)?;
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "gen" => cmd_gen(&args),
+        "collect" => cmd_collect(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "finetune" => cmd_finetune(&args),
+        "eval" => cmd_eval(&args),
+        "roofline" => {
+            let t = crate::platform::roofline::report(
+                args.flag_usize("block-m", 1024),
+                args.flag_usize("block-n", 128),
+            );
+            println!("{}", t.render());
+            Ok(())
+        }
+        "experiment" => cmd_experiment(&args),
+        "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        other => bail!("unknown command {other:?} — see `cognate help`"),
+    }
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let mut pipe = Pipeline::new(args.scale())?;
+    let coll = pipe.collection();
+    let mut t = crate::util::table::Table::new(
+        "matrix collection",
+        &["name", "rows", "cols", "nnz", "density"],
+    );
+    for info in coll.iter().take(30) {
+        let m = &info.matrix;
+        t.row(vec![
+            info.name.clone(),
+            m.rows.to_string(),
+            m.cols.to_string(),
+            m.nnz().to_string(),
+            format!("{:.2e}", m.density()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("({} matrices total)", coll.len());
+    Ok(())
+}
+
+fn cmd_collect(args: &Args) -> Result<()> {
+    let mut pipe = Pipeline::new(args.scale())?;
+    let platform = args.platform("platform", "spade")?;
+    let op = args.op()?;
+    let ds = pipe.dataset(platform, op)?;
+    println!(
+        "dataset {}/{}: {} matrices × {} configs",
+        platform.name(),
+        op.name(),
+        ds.records.len(),
+        ds.records.first().map(|r| r.costs.len()).unwrap_or(0)
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .context("experiment id required (or `all`)")?;
+    let mut pipe = Pipeline::new(args.scale())?;
+    if which == "all" {
+        experiments::run_all(&mut pipe)?;
+    } else {
+        experiments::run(&mut pipe, which)?;
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    use crate::model::ModelDriver;
+    use crate::platform::make_platform;
+    use crate::search::{eval_one, score_all};
+    use crate::sparse::gen::{generate, Family};
+    use crate::train::train;
+
+    let mut pipe = Pipeline::new(args.scale())?;
+    let op = args.op()?;
+    let target = args.platform("target", "spade")?;
+    let k = args.flag_usize("k", 5);
+
+    // Train the full pipeline at the current scale.
+    let src = pipe.dataset(PlatformId::Cpu, op)?;
+    let (src_pool, _) = pipe.splits(&src);
+    let src_idx = pipe.pretrain_subset(&src, &src_pool, pipe.scale.pretrain_matrices);
+    let zenc_src = pipe.trained_ae(PlatformId::Cpu, "ae", 1)?;
+    let mut driver = ModelDriver::init(pipe.rt.clone(), "cognate", 3)?;
+    train(&mut driver, &zenc_src, &src, &src_idx, &[], &pipe.scale.pretrain_opts.clone())?;
+    let tgt = pipe.dataset(target, op)?;
+    let (pool, _) = pipe.splits(&tgt);
+    let ft: Vec<usize> = pool.into_iter().take(pipe.scale.finetune_matrices).collect();
+    let zenc = pipe.trained_ae(target, "ae", 2)?;
+    train(&mut driver, &zenc, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone())?;
+
+    // Tune a fresh matrix the model has never seen.
+    let m = generate(Family::Rmat, 1200, 1200, 0.01, 0xFEED);
+    let sim = make_platform(target);
+    let costs = sim.eval_all(&m, op);
+    let rec = crate::coordinator::serve::record_for(&m, costs, "query");
+    let scores = score_all(&driver, &zenc, &tgt, &rec, None)?;
+    let e = eval_one(&rec, &scores, sim.default_index(), k);
+    println!(
+        "matrix {}×{} nnz={} on {}/{}: top-{k} speedup {:.3}× (optimal {:.3}×), config #{}",
+        m.rows,
+        m.cols,
+        m.nnz(),
+        target.name(),
+        op.name(),
+        e.speedup,
+        e.optimal_speedup,
+        e.chosen_index
+    );
+    println!("chosen config: {:?}", sim.config(e.chosen_index));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::model::ModelDriver;
+    use crate::train::train;
+
+    let mut pipe = Pipeline::new(args.scale())?;
+    let op = args.op()?;
+    let target = args.platform("target", "spade")?;
+    let addr = args.flag("addr", "127.0.0.1:7199");
+
+    let src = pipe.dataset(PlatformId::Cpu, op)?;
+    let (src_pool, _) = pipe.splits(&src);
+    let src_idx = pipe.pretrain_subset(&src, &src_pool, pipe.scale.pretrain_matrices);
+    let zenc_src = pipe.trained_ae(PlatformId::Cpu, "ae", 1)?;
+    let mut driver = ModelDriver::init(pipe.rt.clone(), "cognate", 3)?;
+    train(&mut driver, &zenc_src, &src, &src_idx, &[], &pipe.scale.pretrain_opts.clone())?;
+    let tgt = pipe.dataset(target, op)?;
+    let (pool, _) = pipe.splits(&tgt);
+    let ft: Vec<usize> = pool.into_iter().take(pipe.scale.finetune_matrices).collect();
+    let zenc = pipe.trained_ae(target, "ae", 2)?;
+    train(&mut driver, &zenc, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone())?;
+
+    println!("serving tuned cost model on {addr} (Ctrl-C to stop)");
+    crate::coordinator::serve::serve(driver, zenc, target, &addr, None, |a| {
+        println!("ready on {a}");
+    })
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    use crate::model::checkpoint::Checkpoint;
+    use crate::model::ModelDriver;
+    use crate::train::train;
+    let mut pipe = Pipeline::new(args.scale())?;
+    let op = args.op()?;
+    let variant = args.flag("variant", "cognate");
+    let out = args.flag("out", "results/pretrained.ckpt");
+    let ds = pipe.dataset(PlatformId::Cpu, op)?;
+    let (pool, _) = pipe.splits(&ds);
+    let idx = pipe.pretrain_subset(&ds, &pool, pipe.scale.pretrain_matrices);
+    let zenc = pipe.trained_ae(PlatformId::Cpu, "ae", 1)?;
+    let mut driver = ModelDriver::init(pipe.rt.clone(), &variant, 11)?;
+    let logs = train(&mut driver, &zenc, &ds, &idx, &[], &pipe.scale.pretrain_opts.clone())?;
+    let note = format!(
+        "pretrained variant={variant} op={} matrices={} final_loss={:.4}",
+        op.name(), idx.len(), logs.last().map(|l| l.train_loss).unwrap_or(f64::NAN)
+    );
+    Checkpoint::from_driver(&driver, &note).save(std::path::Path::new(&out))?;
+    println!("wrote {out} ({note})");
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    use crate::model::checkpoint::Checkpoint;
+    use crate::train::train;
+    let mut pipe = Pipeline::new(args.scale())?;
+    let op = args.op()?;
+    let target = args.platform("target", "spade")?;
+    let ckpt_path = args.flags.get("ckpt").context("--ckpt required")?.clone();
+    let out = args.flag("out", "results/finetuned.ckpt");
+    let ckpt = Checkpoint::load(std::path::Path::new(&ckpt_path))?;
+    let pre = ckpt.into_driver(pipe.rt.clone())?;
+    let mut driver = pre.fork_for_finetune();
+    let tgt = pipe.dataset(target, op)?;
+    let (pool, _) = pipe.splits(&tgt);
+    let ft: Vec<usize> = pool.into_iter().take(pipe.scale.finetune_matrices).collect();
+    let zenc = pipe.trained_ae(target, "ae", 2)?;
+    train(&mut driver, &zenc, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone())?;
+    let note = format!("finetuned on {} ({} matrices) from {ckpt_path}", target.name(), ft.len());
+    Checkpoint::from_driver(&driver, &note).save(std::path::Path::new(&out))?;
+    println!("wrote {out} ({note})");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    use crate::model::checkpoint::Checkpoint;
+    use crate::search::{evaluate, oracle_summary};
+    let mut pipe = Pipeline::new(args.scale())?;
+    let op = args.op()?;
+    let target = args.platform("target", "spade")?;
+    let k = args.flag_usize("k", 5);
+    let ckpt_path = args.flags.get("ckpt").context("--ckpt required")?.clone();
+    let driver = Checkpoint::load(std::path::Path::new(&ckpt_path))?.into_driver(pipe.rt.clone())?;
+    let tgt = pipe.dataset(target, op)?;
+    let (_, eval_idx) = pipe.splits(&tgt);
+    let zenc = pipe.trained_ae(target, "ae", 2)?;
+    let di = crate::config::default_config_index(target);
+    let s = evaluate(&driver, &zenc, &tgt, &eval_idx, di, k)?;
+    let oracle = oracle_summary(&tgt, &eval_idx, di);
+    println!(
+        "top-{k} geomean {:.3}x (max {:.3}x, ape {:.1}%), oracle {:.3}x — {} eval matrices",
+        s.geomean_speedup, s.max_speedup, s.ape, oracle.geomean_speedup, s.per_matrix.len()
+    );
+    Ok(())
+}

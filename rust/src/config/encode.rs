@@ -1,0 +1,213 @@
+//! Feature encodings of program configurations for the learned cost
+//! models. Three encodings coexist:
+//!
+//! * **COGNATE** — a `MAPPED_DIM`-d homogeneous vector (the configuration
+//!   mapper input) **plus** a `HET_DIM`-d heterogeneous vector (the
+//!   latent-encoder / autoencoder input). Dim 53 matches the paper's
+//!   configuration-embedding input (Table 6).
+//! * **WACO+FM** — feature *mapping*: the homogeneous vector alone.
+//! * **WACO+FA** — feature *augmentation* (Daumé III): the concatenation
+//!   of all three platforms' raw blocks, with non-applicable blocks
+//!   zeroed — deliberately sparse, which is the failure mode Figure 2/4
+//!   demonstrates.
+
+use super::mapping::{phi_spade, pi_cpu, pi_gpu, MappedConfig, NUM_SLOTS};
+use super::space::{Config, PlatformId};
+
+/// Homogeneous (mapped) vector width: 4 numeric + 7×7 order one-hot.
+pub const MAPPED_DIM: usize = 4 + NUM_SLOTS * NUM_SLOTS; // 53
+
+/// Heterogeneous vector width (padded union of platform-specific knobs).
+/// Layout: [platform one-hot ×3 | cpu format one-hot ×4 |
+///          spade bypass, spade reorder | gpu binding one-hot ×4 |
+///          gpu log2(unroll)/2, gpu vectorize | pad] = 16.
+pub const HET_DIM: usize = 16;
+
+/// Feature-augmentation width: shared numeric(3) + cpu block(12) +
+/// spade block(6) + gpu block(9) = 30.
+pub const FA_DIM: usize = 30;
+
+fn log_norm(x: usize) -> f32 {
+    // log2 of strip sizes normalised to ≈[0,1] over the spaces we use.
+    ((x.max(1) as f32).log2() / 17.0).min(1.5)
+}
+
+/// Encode a mapped config into the `MAPPED_DIM` homogeneous vector.
+pub fn encode_mapped(m: &MappedConfig) -> Vec<f32> {
+    let mut v = vec![0f32; MAPPED_DIM];
+    v[0] = log_norm(m.i);
+    v[1] = log_norm(m.j);
+    v[2] = log_norm(m.k);
+    v[3] = m.real_loops as f32 / NUM_SLOTS as f32;
+    for (pos, slot) in m.order.iter().enumerate() {
+        v[4 + pos * NUM_SLOTS + slot.index()] = 1.0;
+    }
+    v
+}
+
+/// Map + encode in one step for any platform config.
+pub fn mapped_vector(cfg: &Config, matrix_cols: usize) -> Vec<f32> {
+    let m = match cfg {
+        Config::Cpu(c) => pi_cpu(c),
+        Config::Spade(c) => phi_spade(c, matrix_cols),
+        Config::Gpu(c) => pi_gpu(c),
+    };
+    encode_mapped(&m)
+}
+
+/// Encode the heterogeneous component (latent-encoder input).
+pub fn het_vector(cfg: &Config) -> Vec<f32> {
+    let mut v = vec![0f32; HET_DIM];
+    match cfg {
+        Config::Cpu(c) => {
+            v[0] = 1.0;
+            v[3 + c.format.index()] = 1.0;
+        }
+        Config::Spade(c) => {
+            v[1] = 1.0;
+            v[7] = c.bypass as u8 as f32;
+            v[8] = c.reorder as u8 as f32;
+        }
+        Config::Gpu(c) => {
+            v[2] = 1.0;
+            v[9 + c.binding.index()] = 1.0;
+            v[13] = (c.unroll as f32).log2() / 2.0;
+            v[14] = c.vectorize as u8 as f32;
+        }
+    }
+    v
+}
+
+/// Feature augmentation (WACO+FA): raw per-platform blocks concatenated;
+/// blocks for other platforms are zero.
+pub fn fa_vector(cfg: &Config, matrix_cols: usize) -> Vec<f32> {
+    let mut v = vec![0f32; FA_DIM];
+    match cfg {
+        Config::Cpu(c) => {
+            v[0] = log_norm(c.i_split);
+            v[1] = log_norm(c.j_split);
+            v[2] = log_norm(c.k_split);
+            // cpu block: order one-hot(8) + format one-hot(4) at [3..15)
+            v[3 + c.order.index()] = 1.0;
+            v[11 + c.format.index()] = 1.0;
+        }
+        Config::Spade(c) => {
+            v[0] = log_norm(c.resolved_col_panel(matrix_cols));
+            v[1] = log_norm(c.row_panels);
+            v[2] = log_norm(c.split);
+            // spade block at [15..21): rowp log, colp log, split log,
+            // barrier, bypass, reorder
+            v[15] = log_norm(c.row_panels);
+            v[16] = log_norm(c.resolved_col_panel(matrix_cols));
+            v[17] = log_norm(c.split);
+            v[18] = c.barrier as u8 as f32;
+            v[19] = c.bypass as u8 as f32;
+            v[20] = c.reorder as u8 as f32;
+        }
+        Config::Gpu(c) => {
+            v[0] = log_norm(c.i_split);
+            v[1] = 0.0;
+            v[2] = log_norm(c.k1 * c.k2);
+            // gpu block at [21..30): binding(4), unroll(3), vec, k2 log
+            v[21 + c.binding.index()] = 1.0;
+            let u = match c.unroll {
+                1 => 0,
+                2 => 1,
+                _ => 2,
+            };
+            v[25 + u] = 1.0;
+            v[28] = c.vectorize as u8 as f32;
+            v[29] = log_norm(c.k2);
+        }
+    }
+    v
+}
+
+/// Feature mapping (WACO+FM): the homogeneous vector only.
+pub fn fm_vector(cfg: &Config, matrix_cols: usize) -> Vec<f32> {
+    mapped_vector(cfg, matrix_cols)
+}
+
+/// The platform a `Config` belongs to.
+pub fn platform_of(cfg: &Config) -> PlatformId {
+    match cfg {
+        Config::Cpu(_) => PlatformId::Cpu,
+        Config::Spade(_) => PlatformId::Spade,
+        Config::Gpu(_) => PlatformId::Gpu,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::{cpu_space, gpu_space, spade_space};
+
+    #[test]
+    fn dims_are_exact() {
+        assert_eq!(MAPPED_DIM, 53); // paper Table 6: config embedding in=53
+        let c = Config::Spade(spade_space()[7]);
+        assert_eq!(mapped_vector(&c, 4096).len(), MAPPED_DIM);
+        assert_eq!(het_vector(&c).len(), HET_DIM);
+        assert_eq!(fa_vector(&c, 4096).len(), FA_DIM);
+    }
+
+    #[test]
+    fn mapped_one_hot_rows_sum_to_one() {
+        for cfg in [
+            Config::Cpu(cpu_space()[33]),
+            Config::Spade(spade_space()[99]),
+            Config::Gpu(gpu_space()[120]),
+        ] {
+            let v = mapped_vector(&cfg, 2048);
+            for pos in 0..NUM_SLOTS {
+                let s: f32 = v[4 + pos * NUM_SLOTS..4 + (pos + 1) * NUM_SLOTS].iter().sum();
+                assert!((s - 1.0).abs() < 1e-6, "pos {pos} sum {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn het_platform_one_hot() {
+        let c = het_vector(&Config::Cpu(cpu_space()[0]));
+        let s = het_vector(&Config::Spade(spade_space()[0]));
+        let g = het_vector(&Config::Gpu(gpu_space()[0]));
+        assert_eq!((c[0], c[1], c[2]), (1.0, 0.0, 0.0));
+        assert_eq!((s[0], s[1], s[2]), (0.0, 1.0, 0.0));
+        assert_eq!((g[0], g[1], g[2]), (0.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn fa_blocks_are_disjointly_sparse() {
+        // CPU config leaves spade+gpu blocks zero and vice versa —
+        // exactly the sparsity pathology §3.3 describes.
+        let c = fa_vector(&Config::Cpu(cpu_space()[5]), 1024);
+        assert!(c[15..30].iter().all(|&x| x == 0.0));
+        let s = fa_vector(&Config::Spade(spade_space()[5]), 1024);
+        assert!(s[3..15].iter().all(|&x| x == 0.0));
+        assert!(s[21..30].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn distinct_configs_distinct_vectors() {
+        let space = spade_space();
+        let mut seen = std::collections::HashSet::new();
+        for c in &space {
+            let m = mapped_vector(&Config::Spade(*c), 4096);
+            let h = het_vector(&Config::Spade(*c));
+            let key: Vec<u32> = m.iter().chain(h.iter()).map(|f| f.to_bits()).collect();
+            assert!(seen.insert(key), "collision for {c:?}");
+        }
+        assert_eq!(seen.len(), 256);
+    }
+
+    #[test]
+    fn het_ignores_homogeneous_knobs() {
+        let mut a = spade_space()[0];
+        let mut b = a;
+        a.barrier = false;
+        b.barrier = true; // homogeneous (mapped via φ)
+        assert_eq!(het_vector(&Config::Spade(a)), het_vector(&Config::Spade(b)));
+        b.bypass = !a.bypass; // heterogeneous
+        assert_ne!(het_vector(&Config::Spade(a)), het_vector(&Config::Spade(b)));
+    }
+}

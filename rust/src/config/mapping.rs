@@ -1,0 +1,259 @@
+//! §3.2 — Exploiting homogeneity: approximate mapping of comparable code
+//! optimizations into a unified strip-mining representation.
+//!
+//! Every platform's homogeneous component maps to `(I, J, K, ω)`:
+//!   * `I` — row-dimension strip size,
+//!   * `J` — reduction-dimension (columns of A) strip size,
+//!   * `K` — dense-dimension strip size,
+//!   * `ω` — execution order of the seven unified loop slots
+//!     {i1,i2,j1,j2,k1,k2,k3} (outermost first).
+//!
+//! The paper's mapping functions are implemented verbatim:
+//!   * φ : SPADE {p_col, p_row, s_split, b} → {I, J, K, ω}, where the
+//!     barrier bit selects between the two §3.2 orders
+//!     (b=1 ⇒ [k2, j2, i2, i1, j1, k1], b=0 ⇒ [k2, i2, j2, i1, j1, k1]);
+//!   * π_a1 : CPU six-loop nests gain a unit k3 after k2;
+//!   * π_a3 : GPU nests {i1,i2,j,k1,k2,k3} gain a unit j' after j.
+
+use super::space::{CpuConfig, CpuOrder, GpuBinding, GpuConfig, SpadeConfig};
+
+/// Unified loop slots. `J2`/`K3` are unit loops for platforms that do not
+/// split that dimension (the π functions' appended loops).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Slot {
+    I1,
+    I2,
+    J1,
+    J2,
+    K1,
+    K2,
+    K3,
+}
+
+pub const NUM_SLOTS: usize = 7;
+
+impl Slot {
+    pub fn index(&self) -> usize {
+        match self {
+            Slot::I1 => 0,
+            Slot::I2 => 1,
+            Slot::J1 => 2,
+            Slot::J2 => 3,
+            Slot::K1 => 4,
+            Slot::K2 => 5,
+            Slot::K3 => 6,
+        }
+    }
+}
+
+/// A configuration mapped into the unified homogeneous space.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MappedConfig {
+    pub i: usize,
+    pub j: usize,
+    pub k: usize,
+    /// Execution order, outermost first; always all 7 slots.
+    pub order: [Slot; NUM_SLOTS],
+    /// How many of the slots are *real* (non-unit) loops on the platform.
+    pub real_loops: usize,
+}
+
+/// φ — SPADE tiling + barrier → strip-mining + order (§3.2).
+///
+/// `I ≈ p_col` (column panel = reduction strip over A's columns... the
+/// paper's I/J naming maps its (i,j,k) = (rows, reduction, dense) onto
+/// SPADE (p_col, p_row, d_split) as I≈p_col, J≈p_row, K≈s_split —
+/// we keep the paper's assignment exactly).
+pub fn phi_spade(c: &SpadeConfig, matrix_cols: usize) -> MappedConfig {
+    use Slot::*;
+    let order = if c.barrier {
+        // [k2, j2, i2, i1, j1, k1] + appended unit k3
+        [K2, J2, I2, I1, J1, K1, K3]
+    } else {
+        // [k2, i2, j2, i1, j1, k1] + appended unit k3
+        [K2, I2, J2, I1, J1, K1, K3]
+    };
+    MappedConfig {
+        i: c.resolved_col_panel(matrix_cols),
+        j: c.row_panels,
+        k: c.split,
+        order,
+        real_loops: 6,
+    }
+}
+
+/// π_a1 — CPU strip-mined nest {i1,i2,j1,j2,k1,k2} → unified 7 slots
+/// (a unit `k3` is appended immediately after `k2`).
+pub fn pi_cpu(c: &CpuConfig) -> MappedConfig {
+    use Slot::*;
+    // Six-slot orders per CpuOrder (outermost first), k3 inserted after k2.
+    let six: [Slot; 6] = match c.order {
+        CpuOrder::RowMajor => [I1, J1, K1, I2, J2, K2],
+        CpuOrder::KOuter => [K1, I1, J1, I2, J2, K2],
+        CpuOrder::JOuter => [J1, I1, K1, I2, J2, K2],
+        CpuOrder::InnerJ => [I1, K1, J1, I2, K2, J2],
+        CpuOrder::BStationary => [J1, K1, I1, J2, I2, K2],
+        CpuOrder::KJOuter => [K1, J1, I1, I2, J2, K2],
+        CpuOrder::KInner => [I1, J1, I2, J2, K1, K2],
+        CpuOrder::Flat => [I1, I2, J1, J2, K1, K2],
+    };
+    let mut order = [Slot::K3; NUM_SLOTS];
+    let mut w = 0;
+    for s in six {
+        order[w] = s;
+        w += 1;
+        if s == K2 {
+            order[w] = K3; // Ω(k3) = Ω(k2) + 1
+            w += 1;
+        }
+    }
+    if w == 6 {
+        order[6] = K3; // k2 was last: k3 appended at the end
+    }
+    MappedConfig { i: c.i_split, j: c.j_split, k: c.k_split, order, real_loops: 6 }
+}
+
+/// π_a3 — GPU nest {i1,i2,j,k1,k2,k3} → unified 7 slots (a unit `j'`
+/// — our `J2` — is appended immediately after `j` ≡ `J1`).
+///
+/// The *binding* itself is heterogeneous (Table 1) and is NOT encoded
+/// here; but binding determines which loop is outermost in the generated
+/// kernel, so the mapped order reflects that structural consequence —
+/// this is the "approximate" in approximate mapping.
+pub fn pi_gpu(c: &GpuConfig) -> MappedConfig {
+    use Slot::*;
+    let six: [Slot; 6] = match c.binding {
+        // thread-per-row: rows innermost-parallel, dense strips outer
+        GpuBinding::RowPerThread => [I1, K1, I2, J1, K2, K3],
+        // warp-per-row: row loop outermost, k strips within the warp
+        GpuBinding::RowPerWarp => [I1, I2, J1, K1, K2, K3],
+        // block-per-rowblock: k strip hoisted (block-wide tiles of B)
+        GpuBinding::RowPerBlock => [K1, I1, I2, J1, K2, K3],
+        // nnz-balanced: reduction split outermost (atomics combine)
+        GpuBinding::NnzBalanced => [J1, I1, I2, K1, K2, K3],
+    };
+    let mut order = [Slot::J2; NUM_SLOTS];
+    let mut w = 0;
+    for s in six {
+        order[w] = s;
+        w += 1;
+        if s == J1 {
+            order[w] = J2; // Ω(j') = Ω(j) + 1
+            w += 1;
+        }
+    }
+    MappedConfig {
+        i: c.i_split,
+        j: 1, // GPU does not split the reduction dimension
+        k: c.k1 * c.k2,
+        order,
+        real_loops: 6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::{cpu_space, gpu_space, spade_space};
+
+    fn is_perm(order: &[Slot; NUM_SLOTS]) -> bool {
+        let mut seen = [false; NUM_SLOTS];
+        for s in order {
+            if seen[s.index()] {
+                return false;
+            }
+            seen[s.index()] = true;
+        }
+        true
+    }
+
+    #[test]
+    fn phi_barrier_selects_order() {
+        let mut c = spade_space()[0];
+        c.barrier = true;
+        let m1 = phi_spade(&c, 4096);
+        assert_eq!(m1.order[..3], [Slot::K2, Slot::J2, Slot::I2]);
+        c.barrier = false;
+        let m0 = phi_spade(&c, 4096);
+        assert_eq!(m0.order[..3], [Slot::K2, Slot::I2, Slot::J2]);
+        assert!(is_perm(&m1.order) && is_perm(&m0.order));
+    }
+
+    #[test]
+    fn phi_parameter_assignment() {
+        let c = SpadeConfig {
+            row_panels: 32,
+            col_panels: 16384,
+            split: 256,
+            barrier: false,
+            bypass: true,
+            reorder: true,
+        };
+        let m = phi_spade(&c, 100_000);
+        assert_eq!(m.i, 16384); // I ≈ p_col
+        assert_eq!(m.j, 32); // J ≈ p_row
+        assert_eq!(m.k, 256); // K ≈ s_split
+    }
+
+    #[test]
+    fn phi_num_matrix_cols() {
+        let c = SpadeConfig {
+            row_panels: 4,
+            col_panels: 0,
+            split: 32,
+            barrier: false,
+            bypass: false,
+            reorder: false,
+        };
+        assert_eq!(phi_spade(&c, 777).i, 777);
+    }
+
+    #[test]
+    fn pi_cpu_inserts_k3_after_k2() {
+        for c in cpu_space().iter().step_by(17) {
+            let m = pi_cpu(c);
+            assert!(is_perm(&m.order), "{:?}", m.order);
+            let k2 = m.order.iter().position(|s| *s == Slot::K2).unwrap();
+            let k3 = m.order.iter().position(|s| *s == Slot::K3).unwrap();
+            assert_eq!(k3, k2 + 1, "Ω(k3) = Ω(k2)+1 for {:?}", c.order);
+        }
+    }
+
+    #[test]
+    fn pi_gpu_inserts_jprime_after_j() {
+        for c in gpu_space().iter().step_by(7) {
+            let m = pi_gpu(c);
+            assert!(is_perm(&m.order), "{:?}", m.order);
+            let j1 = m.order.iter().position(|s| *s == Slot::J1).unwrap();
+            let j2 = m.order.iter().position(|s| *s == Slot::J2).unwrap();
+            assert_eq!(j2, j1 + 1, "Ω(j') = Ω(j)+1 for {:?}", c.binding);
+            assert_eq!(m.j, 1);
+            assert_eq!(m.k, c.k1 * c.k2);
+        }
+    }
+
+    #[test]
+    fn all_mapped_orders_are_permutations() {
+        for c in spade_space() {
+            assert!(is_perm(&phi_spade(&c, 2048).order));
+        }
+    }
+
+    #[test]
+    fn mapping_is_many_to_one_but_barrier_sensitive() {
+        // Two SPADE configs differing only in bypass map identically
+        // (bypass is heterogeneous); differing in barrier map differently.
+        let base = SpadeConfig {
+            row_panels: 32,
+            col_panels: 1024,
+            split: 32,
+            barrier: false,
+            bypass: false,
+            reorder: false,
+        };
+        let bypassed = SpadeConfig { bypass: true, ..base };
+        let barriered = SpadeConfig { barrier: true, ..base };
+        assert_eq!(phi_spade(&base, 4096), phi_spade(&bypassed, 4096));
+        assert_ne!(phi_spade(&base, 4096), phi_spade(&barriered, 4096));
+    }
+}

@@ -1,0 +1,16 @@
+//! Program-configuration spaces (Table 1), the §3.2 homogeneous mapping
+//! functions φ/π, and the feature encodings (COGNATE mapped+het,
+//! WACO+FA, WACO+FM) consumed by the learned cost models.
+
+pub mod encode;
+pub mod mapping;
+pub mod space;
+
+pub use encode::{fa_vector, fm_vector, het_vector, mapped_vector, FA_DIM, HET_DIM, MAPPED_DIM};
+pub use mapping::{phi_spade, pi_cpu, pi_gpu, MappedConfig, Slot, NUM_SLOTS};
+pub use space::{
+    cpu_space, default_config_index, gpu_space, spade_space, Config, CpuConfig, CpuOrder,
+    GpuBinding, GpuConfig, PlatformId, SpadeConfig, ALL_CPU_ORDERS, ALL_GPU_BINDINGS,
+    CPU_I_SPLITS, CPU_J_SPLITS, CPU_K_SPLITS, GPU_I_SPLITS, GPU_K1_SPLITS, GPU_K2_SPLITS,
+    GPU_UNROLLS, SPADE_COL_PANELS, SPADE_ROW_PANELS, SPADE_SPLITS,
+};

@@ -1,0 +1,386 @@
+//! Program-configuration spaces for the three hardware platforms
+//! (Table 1 of the paper).
+//!
+//! * **CPU (TACO)** — loop strip-mining (I, J, K), loop reordering
+//!   (order over {i1,i2,j1,j2,k1,k2}), format reordering. 1,024 configs.
+//! * **SPADE** — tiling (row panels × col panels × split factor),
+//!   barrier, cache bypassing, matrix reordering. Exactly the paper's
+//!   256-point space: {4,32,256,2048} × {1024,16384,65536,NUM_COLS} ×
+//!   {32,256} × 2 × 2 × 2.
+//! * **GPU (SparseTIR)** — strip-mining, loop binding, loop unrolling,
+//!   vectorization. 288 configs ("approximately 300", §4.1).
+
+use crate::sparse::reorder::Reorder;
+
+// ---------------------------------------------------------------------------
+// CPU (TACO)
+// ---------------------------------------------------------------------------
+
+/// Named loop orders over the strip-mined nest {i1,i2,j1,j2,k1,k2}.
+/// `i` = rows of A, `j` = reduction (columns of A), `k` = dense columns.
+/// Slot values match `mapping::Slot`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CpuOrder {
+    /// i1 j1 k1 i2 j2 k2 — canonical row-major
+    RowMajor,
+    /// k1 i1 j1 i2 j2 k2 — dense-column strips hoisted outermost
+    KOuter,
+    /// j1 i1 k1 i2 j2 k2 — reduction panels outermost (B panel resident)
+    JOuter,
+    /// i1 k1 j1 i2 k2 j2 — inner reduction last (register-tile D)
+    InnerJ,
+    /// j1 k1 i1 j2 i2 k2 — B-stationary
+    BStationary,
+    /// k1 j1 i1 i2 j2 k2 — k then reduction outer
+    KJOuter,
+    /// i1 j1 i2 j2 k1 k2 — k innermost entirely (streaming D)
+    KInner,
+    /// i1 i2 j1 j2 k1 k2 — fully row-blocked then flat
+    Flat,
+}
+
+pub const ALL_CPU_ORDERS: [CpuOrder; 8] = [
+    CpuOrder::RowMajor,
+    CpuOrder::KOuter,
+    CpuOrder::JOuter,
+    CpuOrder::InnerJ,
+    CpuOrder::BStationary,
+    CpuOrder::KJOuter,
+    CpuOrder::KInner,
+    CpuOrder::Flat,
+];
+
+impl CpuOrder {
+    pub fn index(&self) -> usize {
+        ALL_CPU_ORDERS.iter().position(|o| o == self).unwrap()
+    }
+}
+
+pub const CPU_I_SPLITS: [usize; 4] = [16, 64, 256, 1024];
+pub const CPU_J_SPLITS: [usize; 4] = [16, 64, 256, 1024];
+pub const CPU_K_SPLITS: [usize; 2] = [8, 32];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CpuConfig {
+    pub i_split: usize,
+    pub j_split: usize,
+    pub k_split: usize,
+    pub order: CpuOrder,
+    pub format: Reorder,
+}
+
+// ---------------------------------------------------------------------------
+// SPADE
+// ---------------------------------------------------------------------------
+
+pub const SPADE_ROW_PANELS: [usize; 4] = [4, 32, 256, 2048];
+/// `0` encodes NUM_MATRIX_COLS (resolved against the input matrix).
+pub const SPADE_COL_PANELS: [usize; 4] = [1024, 16384, 65536, 0];
+pub const SPADE_SPLITS: [usize; 2] = [32, 256];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SpadeConfig {
+    /// Rows per row panel.
+    pub row_panels: usize,
+    /// Columns (of A) per column panel; `0` = whole matrix width.
+    pub col_panels: usize,
+    /// Dense-dimension split factor.
+    pub split: usize,
+    pub barrier: bool,
+    pub bypass: bool,
+    pub reorder: bool,
+}
+
+impl SpadeConfig {
+    /// Resolve `col_panels == 0` (NUM_MATRIX_COLS) against a matrix width.
+    pub fn resolved_col_panel(&self, cols: usize) -> usize {
+        if self.col_panels == 0 {
+            cols.max(1)
+        } else {
+            self.col_panels
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GPU (SparseTIR)
+// ---------------------------------------------------------------------------
+
+/// Loop-binding strategies (which loop is bound to which execution unit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GpuBinding {
+    /// One row per thread — fine-grained, divergence-prone on skew.
+    RowPerThread,
+    /// One row per warp — good for long rows, wasteful on short ones.
+    RowPerWarp,
+    /// Row block per threadblock with per-thread k partition.
+    RowPerBlock,
+    /// Nnz-balanced split with atomic combine.
+    NnzBalanced,
+}
+
+pub const ALL_GPU_BINDINGS: [GpuBinding; 4] = [
+    GpuBinding::RowPerThread,
+    GpuBinding::RowPerWarp,
+    GpuBinding::RowPerBlock,
+    GpuBinding::NnzBalanced,
+];
+
+impl GpuBinding {
+    pub fn index(&self) -> usize {
+        ALL_GPU_BINDINGS.iter().position(|b| b == self).unwrap()
+    }
+}
+
+pub const GPU_I_SPLITS: [usize; 3] = [16, 64, 256];
+pub const GPU_K1_SPLITS: [usize; 2] = [8, 32];
+pub const GPU_K2_SPLITS: [usize; 2] = [2, 8];
+pub const GPU_UNROLLS: [usize; 3] = [1, 2, 4];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GpuConfig {
+    pub i_split: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub binding: GpuBinding,
+    pub unroll: usize,
+    pub vectorize: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Unified enumeration
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Config {
+    Cpu(CpuConfig),
+    Spade(SpadeConfig),
+    Gpu(GpuConfig),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlatformId {
+    Cpu,
+    Spade,
+    Gpu,
+}
+
+impl PlatformId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlatformId::Cpu => "cpu",
+            PlatformId::Spade => "spade",
+            PlatformId::Gpu => "gpu",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cpu" => Some(PlatformId::Cpu),
+            "spade" => Some(PlatformId::Spade),
+            "gpu" => Some(PlatformId::Gpu),
+            _ => None,
+        }
+    }
+    pub fn index(&self) -> usize {
+        match self {
+            PlatformId::Cpu => 0,
+            PlatformId::Spade => 1,
+            PlatformId::Gpu => 2,
+        }
+    }
+}
+
+/// Enumerate the full CPU space (1,024 configs), index-stable.
+pub fn cpu_space() -> Vec<CpuConfig> {
+    let mut v = Vec::with_capacity(1024);
+    for &i_split in &CPU_I_SPLITS {
+        for &j_split in &CPU_J_SPLITS {
+            for &k_split in &CPU_K_SPLITS {
+                for &order in &ALL_CPU_ORDERS {
+                    for &format in &crate::sparse::reorder::ALL_REORDERS {
+                        v.push(CpuConfig { i_split, j_split, k_split, order, format });
+                    }
+                }
+            }
+        }
+    }
+    v
+}
+
+/// Enumerate the SPADE space (exactly 256 configs), index-stable.
+pub fn spade_space() -> Vec<SpadeConfig> {
+    let mut v = Vec::with_capacity(256);
+    for &row_panels in &SPADE_ROW_PANELS {
+        for &col_panels in &SPADE_COL_PANELS {
+            for &split in &SPADE_SPLITS {
+                for barrier in [false, true] {
+                    for bypass in [false, true] {
+                        for reorder in [false, true] {
+                            v.push(SpadeConfig {
+                                row_panels,
+                                col_panels,
+                                split,
+                                barrier,
+                                bypass,
+                                reorder,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    v
+}
+
+/// Enumerate the GPU space (288 configs), index-stable.
+pub fn gpu_space() -> Vec<GpuConfig> {
+    let mut v = Vec::with_capacity(288);
+    for &i_split in &GPU_I_SPLITS {
+        for &k1 in &GPU_K1_SPLITS {
+            for &k2 in &GPU_K2_SPLITS {
+                for &binding in &ALL_GPU_BINDINGS {
+                    for &unroll in &GPU_UNROLLS {
+                        for vectorize in [false, true] {
+                            v.push(GpuConfig { i_split, k1, k2, binding, unroll, vectorize });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    v
+}
+
+/// Index of each platform's *default* configuration — the programming
+/// system's out-of-the-box schedule, used as the speedup baseline.
+pub fn default_config_index(p: PlatformId) -> usize {
+    match p {
+        PlatformId::Cpu => {
+            let space = cpu_space();
+            space
+                .iter()
+                .position(|c| {
+                    c.i_split == 256
+                        && c.j_split == 1024
+                        && c.k_split == 32
+                        && c.order == CpuOrder::RowMajor
+                        && c.format == Reorder::None
+                })
+                .unwrap()
+        }
+        PlatformId::Spade => {
+            let space = spade_space();
+            space
+                .iter()
+                .position(|c| {
+                    c.row_panels == 256
+                        && c.col_panels == 0
+                        && c.split == 32
+                        && !c.barrier
+                        && !c.bypass
+                        && !c.reorder
+                })
+                .unwrap()
+        }
+        PlatformId::Gpu => {
+            let space = gpu_space();
+            space
+                .iter()
+                .position(|c| {
+                    c.i_split == 64
+                        && c.k1 == 32
+                        && c.k2 == 2
+                        && c.binding == GpuBinding::RowPerThread
+                        && c.unroll == 1
+                        && !c.vectorize
+                })
+                .unwrap()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spade_space_is_exactly_256() {
+        let s = spade_space();
+        assert_eq!(s.len(), 256);
+        // All unique.
+        let mut set = std::collections::HashSet::new();
+        for c in &s {
+            assert!(set.insert(*c));
+        }
+    }
+
+    #[test]
+    fn cpu_space_is_1024() {
+        assert_eq!(cpu_space().len(), 1024);
+    }
+
+    #[test]
+    fn gpu_space_is_about_300() {
+        let n = gpu_space().len();
+        assert_eq!(n, 288);
+        assert!((250..=350).contains(&n), "paper says ~300");
+    }
+
+    #[test]
+    fn default_indices_resolve() {
+        for p in [PlatformId::Cpu, PlatformId::Spade, PlatformId::Gpu] {
+            let idx = default_config_index(p);
+            let n = match p {
+                PlatformId::Cpu => cpu_space().len(),
+                PlatformId::Spade => spade_space().len(),
+                PlatformId::Gpu => gpu_space().len(),
+            };
+            assert!(idx < n);
+        }
+    }
+
+    #[test]
+    fn col_panel_resolution() {
+        let c = SpadeConfig {
+            row_panels: 4,
+            col_panels: 0,
+            split: 32,
+            barrier: false,
+            bypass: false,
+            reorder: false,
+        };
+        assert_eq!(c.resolved_col_panel(777), 777);
+        let c2 = SpadeConfig { col_panels: 1024, ..c };
+        assert_eq!(c2.resolved_col_panel(777), 1024);
+    }
+
+    #[test]
+    fn spaces_index_stable() {
+        // Regression guard: dataset files store config indices; the
+        // enumeration order must never change silently.
+        let s = spade_space();
+        assert_eq!(
+            s[0],
+            SpadeConfig {
+                row_panels: 4,
+                col_panels: 1024,
+                split: 32,
+                barrier: false,
+                bypass: false,
+                reorder: false
+            }
+        );
+        assert_eq!(
+            s[255],
+            SpadeConfig {
+                row_panels: 2048,
+                col_panels: 0,
+                split: 256,
+                barrier: true,
+                bypass: true,
+                reorder: true
+            }
+        );
+    }
+}

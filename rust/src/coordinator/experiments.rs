@@ -1,0 +1,612 @@
+//! Experiment registry: one regenerator per paper table/figure
+//! (DESIGN.md per-experiment index). Each prints an aligned table and
+//! writes the same rows to `results/<id>.csv`.
+
+use super::Pipeline;
+use crate::baselines::{self, MethodCtx};
+use crate::config::PlatformId;
+use crate::dataset::Dataset;
+use crate::kernels::Op;
+use crate::model::pca::Pca;
+use crate::model::ModelDriver;
+use crate::search::{self, evaluate, oracle_summary, EvalSummary};
+use crate::train::{config_features, train, ZEncoder};
+use crate::util::stats;
+use crate::util::table::Table;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "table1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "table2", "fig13", "fig14", "fig15",
+];
+
+/// Lazily-built shared state: datasets, AEs and pre-trained models are
+/// reused across experiments in one `experiment all` run.
+pub struct Workbench<'p> {
+    pub pipe: &'p mut Pipeline,
+    aes: HashMap<(PlatformId, &'static str), Arc<ZEncoder>>,
+    pretrained: HashMap<(String, Op, usize), Arc<ModelDriver>>,
+}
+
+impl<'p> Workbench<'p> {
+    pub fn new(pipe: &'p mut Pipeline) -> Self {
+        Workbench { pipe, aes: HashMap::new(), pretrained: HashMap::new() }
+    }
+
+    fn ae(&mut self, platform: PlatformId, kind: &'static str) -> Result<Arc<ZEncoder>> {
+        if let Some(z) = self.aes.get(&(platform, kind)) {
+            return Ok(z.clone());
+        }
+        let z = Arc::new(self.pipe.trained_ae(platform, kind, platform.index() as i32 + 7)?);
+        self.aes.insert((platform, kind), z.clone());
+        Ok(z.clone())
+    }
+
+    /// Pre-train `variant` on CPU for `op` with `n_matrices` sources.
+    fn pretrained(&mut self, variant: &str, op: Op, n_matrices: usize) -> Result<Arc<ModelDriver>> {
+        let key = (variant.to_string(), op, n_matrices);
+        if let Some(d) = self.pretrained.get(&key) {
+            return Ok(d.clone());
+        }
+        let ds = self.pipe.dataset(PlatformId::Cpu, op)?;
+        let (pool, _) = self.pipe.splits(&ds);
+        let idx = self.pipe.pretrain_subset(&ds, &pool, n_matrices);
+        let zenc = self.ae(PlatformId::Cpu, "ae")?;
+        let mut driver = ModelDriver::init(self.pipe.rt.clone(), variant, 11)?;
+        let opts = self.pipe.scale.pretrain_opts.clone();
+        crate::info!("pretraining {variant} on cpu/{} with {} matrices", op.name(), idx.len());
+        train(&mut driver, &zenc, &ds, &idx, &[], &opts)?;
+        let d = Arc::new(driver);
+        self.pretrained.insert(key, d.clone());
+        Ok(d)
+    }
+
+    fn method_ctx<'a>(
+        &self,
+        source_ds: &'a Dataset,
+        source_idx: &'a [usize],
+        target_ds: &'a Dataset,
+        finetune_idx: &'a [usize],
+        eval_idx: &'a [usize],
+        default_index: usize,
+    ) -> MethodCtx<'a> {
+        MethodCtx {
+            rt: self.pipe.rt.clone(),
+            source_ds,
+            source_train_idx: source_idx,
+            target_ds,
+            finetune_idx,
+            eval_idx,
+            default_index,
+            pretrain_opts: self.pipe.scale.pretrain_opts.clone(),
+            finetune_opts: self.pipe.scale.finetune_opts.clone(),
+            seed: 33,
+        }
+    }
+
+    /// The standard (op, target) setup shared by most experiments.
+    fn setup(&mut self, op: Op, target: PlatformId) -> Result<Setup> {
+        let target_ds = self.pipe.dataset(target, op)?;
+        let (pool, eval_idx) = self.pipe.splits(&target_ds);
+        let finetune_idx: Vec<usize> =
+            pool.iter().copied().take(self.pipe.scale.finetune_matrices).collect();
+        let default_index = crate::config::default_config_index(target);
+        Ok(Setup { target_ds, pool, eval_idx, finetune_idx, default_index })
+    }
+}
+
+pub struct Setup {
+    pub target_ds: Arc<Dataset>,
+    pub pool: Vec<usize>,
+    pub eval_idx: Vec<usize>,
+    pub finetune_idx: Vec<usize>,
+    pub default_index: usize,
+}
+
+pub fn run(pipe: &mut Pipeline, which: &str) -> Result<Vec<Table>> {
+    let mut wb = Workbench::new(pipe);
+    run_with(&mut wb, which)
+}
+
+/// Run one experiment against a SHARED workbench so pre-trained models,
+/// AEs and datasets are reused across an `experiment all` sweep.
+pub fn run_with(wb: &mut Workbench, which: &str) -> Result<Vec<Table>> {
+    let tables = match which {
+        "table1" => table1(),
+        "fig2" => fig2_fig4(wb, &[Op::Spmm], &[PlatformId::Spade], "fig2")?,
+        "fig4" => fig2_fig4(
+            wb,
+            &[Op::Spmm, Op::Sddmm],
+            &[PlatformId::Spade, PlatformId::Gpu],
+            "fig4",
+        )?,
+        "fig5" => per_matrix(wb, Op::Spmm, 1, "fig5")?,
+        "fig6" => fig6(wb)?,
+        "fig7" => variant_ablation(wb, &["cognate", "noife", "nofm", "nole"], "fig7")?,
+        "fig8" => variant_ablation(wb, &["cognate", "tf", "gru"], "fig8")?,
+        "fig9" => fig9(wb)?,
+        "fig10" => fig10(wb)?,
+        "fig11" => fig11(wb)?,
+        "fig12" => fig12(wb)?,
+        "table2" => table2(wb)?,
+        "fig13" => per_matrix(wb, Op::Spmm, 5, "fig13")?,
+        "fig14" => per_matrix(wb, Op::Sddmm, 1, "fig14")?,
+        "fig15" => per_matrix(wb, Op::Sddmm, 5, "fig15")?,
+        other => bail!("unknown experiment {other:?} (try: {})", ALL_EXPERIMENTS.join(", ")),
+    };
+    let dir = wb.pipe.results_dir.clone();
+    for t in &tables {
+        println!("{}", t.render());
+        let name = t
+            .title
+            .split_whitespace()
+            .next()
+            .unwrap_or("out")
+            .trim_end_matches(':')
+            .to_lowercase();
+        t.save_csv(&dir, &name)?;
+    }
+    Ok(tables)
+}
+
+/// Table 1 — config-parameter availability matrix (documentation check:
+/// regenerated from the actual config spaces).
+fn table1() -> Vec<Table> {
+    let mut t = Table::new(
+        "table1: program configuration parameters across platforms",
+        &["param", "cpu", "gpu", "spade", "type"],
+    );
+    let rows = [
+        ("loop strip-mining", "y", "y", "", "numerical"),
+        ("loop reordering", "y", "y", "", "categorical"),
+        ("format reordering", "y", "", "", "categorical"),
+        ("loop binding", "", "y", "", "categorical"),
+        ("loop unrolling", "", "y", "", "categorical"),
+        ("tiling", "", "", "y", "numerical"),
+        ("barrier", "", "", "y", "binary"),
+        ("cache bypassing", "", "", "y", "binary"),
+        ("matrix reordering", "", "", "y", "binary"),
+    ];
+    for (p, c, g, s, ty) in rows {
+        t.row(vec![p.into(), c.into(), g.into(), s.into(), ty.into()]);
+    }
+    vec![t]
+}
+
+/// Figures 2 & 4 — headline method comparison.
+fn fig2_fig4(
+    wb: &mut Workbench,
+    ops: &[Op],
+    targets: &[PlatformId],
+    id: &str,
+) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        &format!("{id}: geomean speedups vs baseline (higher is better)"),
+        &["op", "target", "method", "geomean", "max", "ape%", "frac_of_optimal"],
+    );
+    for &op in ops {
+        let source_ds = wb.pipe.dataset(PlatformId::Cpu, op)?;
+        let (source_pool, _) = wb.pipe.splits(&source_ds);
+        let n_pre = wb.pipe.scale.pretrain_matrices;
+        for &target in targets {
+            let setup = wb.setup(op, target)?;
+            let zenc_t = wb.ae(target, "ae")?;
+            let ctx = wb.method_ctx(
+                &source_ds,
+                &source_pool,
+                &setup.target_ds,
+                &setup.finetune_idx,
+                &setup.eval_idx,
+                setup.default_index,
+            );
+            let oracle = oracle_summary(&setup.target_ds, &setup.eval_idx, setup.default_index);
+            let mut push = |method: &str, s: &EvalSummary| {
+                t.row(vec![
+                    op.name().into(),
+                    target.name().into(),
+                    method.into(),
+                    Table::f(s.geomean_speedup),
+                    Table::f(s.max_speedup),
+                    Table::f(s.ape),
+                    Table::f(s.geomean_speedup / oracle.geomean_speedup),
+                ]);
+            };
+            // COGNATE pre-trained once, reused for zero-shot + top-1/5.
+            let pre = wb.pretrained("cognate", op, n_pre)?;
+            let zs = baselines::zero_shot(&ctx, &pre, &zenc_t, 1)?;
+            push("zero-shot", &zs);
+            let nt = baselines::no_transfer(&ctx, "cognate", &zenc_t, 1)?;
+            push("no-transfer", &nt);
+            for variant in ["waco_fa", "waco_fm"] {
+                let prew = wb.pretrained(variant, op, n_pre)?;
+                let ctx2 = wb.method_ctx(
+                    &source_ds,
+                    &source_pool,
+                    &setup.target_ds,
+                    &setup.finetune_idx,
+                    &setup.eval_idx,
+                    setup.default_index,
+                );
+                let s = baselines::finetune_and_eval(&ctx2, &prew, &ZEncoder::Zero, 1)?;
+                push(variant, &s);
+            }
+            let mut tuned = pre.fork_for_finetune();
+            train(
+                &mut tuned,
+                &zenc_t,
+                &setup.target_ds,
+                &setup.finetune_idx,
+                &[],
+                &wb.pipe.scale.finetune_opts.clone(),
+            )?;
+            let top1 =
+                evaluate(&tuned, &zenc_t, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+            push("cognate-top1", &top1);
+            let top5 =
+                evaluate(&tuned, &zenc_t, &setup.target_ds, &setup.eval_idx, setup.default_index, 5)?;
+            push("cognate-top5", &top5);
+            push("oracle", &oracle);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Figures 5 / 13 / 14 / 15 — per-matrix speedups of the tuned model.
+fn per_matrix(wb: &mut Workbench, op: Op, k: usize, id: &str) -> Result<Vec<Table>> {
+    let target = PlatformId::Spade;
+    let setup = wb.setup(op, target)?;
+    let zenc = wb.ae(target, "ae")?;
+    let pre = wb.pretrained("cognate", op, wb.pipe.scale.pretrain_matrices)?;
+    let mut tuned = pre.fork_for_finetune();
+    train(
+        &mut tuned,
+        &zenc,
+        &setup.target_ds,
+        &setup.finetune_idx,
+        &[],
+        &wb.pipe.scale.finetune_opts.clone(),
+    )?;
+    let s = evaluate(&tuned, &zenc, &setup.target_ds, &setup.eval_idx, setup.default_index, k)?;
+    let mut t = Table::new(
+        &format!("{id}: per-matrix speedups, cognate top-{k}, {} on spade", op.name()),
+        &["matrix", "speedup", "optimal"],
+    );
+    let mut rows = s.per_matrix.clone();
+    rows.sort_by(|a, b| b.speedup.partial_cmp(&a.speedup).unwrap());
+    for e in rows {
+        t.row(vec![e.name, Table::f(e.speedup), Table::f(e.optimal_speedup)]);
+    }
+    Ok(vec![t])
+}
+
+/// Figure 6 — PRL / OPA / K-τ training curves (pre-training on CPU).
+fn fig6(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let op = Op::Spmm;
+    let ds = wb.pipe.dataset(PlatformId::Cpu, op)?;
+    let (pool, eval) = wb.pipe.splits(&ds);
+    let idx = wb.pipe.pretrain_subset(&ds, &pool, wb.pipe.scale.pretrain_matrices);
+    let zenc = wb.ae(PlatformId::Cpu, "ae")?;
+    let mut driver = ModelDriver::init(wb.pipe.rt.clone(), "cognate", 5)?;
+    let mut opts = wb.pipe.scale.pretrain_opts.clone();
+    opts.val_matrices = 6.min(eval.len());
+    opts.val_configs = 32;
+    let logs = train(&mut driver, &zenc, &ds, &idx, &eval, &opts)?;
+    let mut t = Table::new(
+        "fig6: training loss and ranking accuracy per epoch",
+        &["epoch", "train_prl", "val_prl", "opa", "ktau"],
+    );
+    for l in logs {
+        t.row(vec![
+            l.epoch.to_string(),
+            Table::f(l.train_loss),
+            Table::f(l.val_prl),
+            Table::f(l.val_opa),
+            Table::f(l.val_ktau),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Figures 7 & 8 — model-component / predictor ablations.
+fn variant_ablation(wb: &mut Workbench, variants: &[&str], id: &str) -> Result<Vec<Table>> {
+    let (op, target) = (Op::Spmm, PlatformId::Spade);
+    let setup = wb.setup(op, target)?;
+    let zenc = wb.ae(target, "ae")?;
+    let mut t = Table::new(
+        &format!("{id}: ablation (spmm on spade, top-1)"),
+        &["variant", "geomean", "ape%"],
+    );
+    for &variant in variants {
+        let pre = wb.pretrained(variant, op, wb.pipe.scale.pretrain_matrices)?;
+        let z: &ZEncoder = if variant == "nole" { &ZEncoder::Zero } else { &zenc };
+        let mut tuned = pre.fork_for_finetune();
+        train(
+            &mut tuned,
+            z,
+            &setup.target_ds,
+            &setup.finetune_idx,
+            &[],
+            &wb.pipe.scale.finetune_opts.clone(),
+        )?;
+        let s = evaluate(&tuned, z, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+        t.row(vec![variant.into(), Table::f(s.geomean_speedup), Table::f(s.ape)]);
+    }
+    Ok(vec![t])
+}
+
+/// Figure 9 — heterogeneous-component encodings: FA / PCA / AE / VAE.
+fn fig9(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let (op, target) = (Op::Spmm, PlatformId::Spade);
+    let setup = wb.setup(op, target)?;
+    let pre = wb.pretrained("cognate", op, wb.pipe.scale.pretrain_matrices)?;
+    let feats = config_features(target, 4096);
+    let het_dim = wb.pipe.rt.dim("HET_DIM");
+    let mut t = Table::new(
+        "fig9: latent encodings of hardware-specific knobs (spmm/spade, top-1)",
+        &["encoder", "geomean", "ape%"],
+    );
+    let encoders: Vec<(&str, Arc<ZEncoder>)> = vec![
+        ("feature-augment", Arc::new(ZEncoder::RawHet)),
+        ("pca", Arc::new(ZEncoder::Pca(Pca::fit(&feats.het, het_dim, 8)))),
+        ("autoencoder", wb.ae(target, "ae")?),
+        ("vae", wb.ae(target, "vae")?),
+    ];
+    for (name, z) in encoders {
+        let mut tuned = pre.fork_for_finetune();
+        train(
+            &mut tuned,
+            &z,
+            &setup.target_ds,
+            &setup.finetune_idx,
+            &[],
+            &wb.pipe.scale.finetune_opts.clone(),
+        )?;
+        let s = evaluate(&tuned, &z, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+        t.row(vec![name.into(), Table::f(s.geomean_speedup), Table::f(s.ape)]);
+    }
+    Ok(vec![t])
+}
+
+/// Figure 10 — data overhead without transfer learning (NT d sweep).
+fn fig10(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let (op, target) = (Op::Spmm, PlatformId::Spade);
+    let setup = wb.setup(op, target)?;
+    let zenc = wb.ae(target, "ae")?;
+    let mut t = Table::new(
+        "fig10: no-transfer target-data sweep vs cognate TL-5",
+        &["method", "target_matrices", "geomean", "ape%"],
+    );
+    let max_d = setup.pool.len();
+    for d in [2usize, 5, 10, 20, 40] {
+        if d > max_d {
+            break;
+        }
+        let idx: Vec<usize> = setup.pool.iter().copied().take(d).collect();
+        let mut driver = ModelDriver::init(wb.pipe.rt.clone(), "cognate", 99 + d as i32)?;
+        let mut opts = wb.pipe.scale.pretrain_opts.clone();
+        opts.epochs = (opts.epochs * 2).max(8);
+        train(&mut driver, &zenc, &setup.target_ds, &idx, &[], &opts)?;
+        let s = evaluate(&driver, &zenc, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+        t.row(vec!["NT".into(), d.to_string(), Table::f(s.geomean_speedup), Table::f(s.ape)]);
+    }
+    // Reference: transfer-learned with 5 matrices.
+    let pre = wb.pretrained("cognate", op, wb.pipe.scale.pretrain_matrices)?;
+    let mut tuned = pre.fork_for_finetune();
+    train(
+        &mut tuned,
+        &zenc,
+        &setup.target_ds,
+        &setup.finetune_idx,
+        &[],
+        &wb.pipe.scale.finetune_opts.clone(),
+    )?;
+    let s = evaluate(&tuned, &zenc, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+    t.row(vec![
+        "TL (cognate)".into(),
+        setup.finetune_idx.len().to_string(),
+        Table::f(s.geomean_speedup),
+        Table::f(s.ape),
+    ]);
+    Ok(vec![t])
+}
+
+/// Figure 11 — negative transfer: source-dataset-size sweep.
+fn fig11(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let (op, target) = (Op::Spmm, PlatformId::Spade);
+    let setup = wb.setup(op, target)?;
+    let zenc = wb.ae(target, "ae")?;
+    let mut t = Table::new(
+        "fig11: impact of source-dataset size (finetune on 5 target matrices)",
+        &["source_matrices", "geomean", "ape%"],
+    );
+    let source_ds = wb.pipe.dataset(PlatformId::Cpu, op)?;
+    let (pool, _) = wb.pipe.splits(&source_ds);
+    for n in [3usize, 10, 25, 60, 90] {
+        if n > pool.len() {
+            break;
+        }
+        let pre = wb.pretrained("cognate", op, n)?;
+        let mut tuned = pre.fork_for_finetune();
+        train(
+            &mut tuned,
+            &zenc,
+            &setup.target_ds,
+            &setup.finetune_idx,
+            &[],
+            &wb.pipe.scale.finetune_opts.clone(),
+        )?;
+        let s = evaluate(&tuned, &zenc, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+        t.row(vec![n.to_string(), Table::f(s.geomean_speedup), Table::f(s.ape)]);
+    }
+    Ok(vec![t])
+}
+
+/// Figure 12 — number of fine-tuning matrices.
+fn fig12(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let (op, target) = (Op::Spmm, PlatformId::Spade);
+    let setup = wb.setup(op, target)?;
+    let zenc = wb.ae(target, "ae")?;
+    let pre = wb.pretrained("cognate", op, wb.pipe.scale.pretrain_matrices)?;
+    let mut t = Table::new(
+        "fig12: fine-tuning sample-count sweep",
+        &["finetune_matrices", "geomean", "ape%"],
+    );
+    for d in [1usize, 3, 5, 7, 10, 20] {
+        if d > setup.pool.len() {
+            break;
+        }
+        let idx: Vec<usize> = setup.pool.iter().copied().take(d).collect();
+        let mut tuned = pre.fork_for_finetune();
+        train(
+            &mut tuned,
+            &zenc,
+            &setup.target_ds,
+            &idx,
+            &[],
+            &wb.pipe.scale.finetune_opts.clone(),
+        )?;
+        let s = evaluate(&tuned, &zenc, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+        t.row(vec![d.to_string(), Table::f(s.geomean_speedup), Table::f(s.ape)]);
+    }
+    Ok(vec![t])
+}
+
+/// Table 2 — speedup / APE / DCE across data-budget categories.
+fn table2(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let (op, target) = (Op::Spmm, PlatformId::Spade);
+    let setup = wb.setup(op, target)?;
+    let zenc = wb.ae(target, "ae")?;
+    let cfgs_per = wb.pipe.scale.pretrain_opts.configs_per_matrix;
+    let beta_cpu = 1.0;
+    let beta_spade = 1000.0;
+    let dce = |cpu_m: usize, spade_m: usize| {
+        (beta_cpu * (cpu_m * cfgs_per) as f64 + beta_spade * (spade_m * cfgs_per) as f64) / 1e6
+    };
+    let mut t = Table::new(
+        "table2: cost-model performance vs data budget (spmm on spade)",
+        &["model", "cpu_samples", "spade_samples", "top1_speedup", "ape%", "dce/1e6"],
+    );
+    let n_pre = wb.pipe.scale.pretrain_matrices;
+
+    // NT d — target-only training.
+    for d in [2usize, 5, 15] {
+        if d > setup.pool.len() {
+            break;
+        }
+        let idx: Vec<usize> = setup.pool.iter().copied().take(d).collect();
+        let mut driver = ModelDriver::init(wb.pipe.rt.clone(), "cognate", 200 + d as i32)?;
+        let mut opts = wb.pipe.scale.pretrain_opts.clone();
+        opts.epochs = (opts.epochs * 2).max(8);
+        train(&mut driver, &zenc, &setup.target_ds, &idx, &[], &opts)?;
+        let s = evaluate(&driver, &zenc, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+        t.row(vec![
+            format!("NT {d}"),
+            "0".into(),
+            (d * cfgs_per).to_string(),
+            Table::f(s.geomean_speedup),
+            Table::f(s.ape),
+            Table::f(dce(0, d)),
+        ]);
+    }
+    // TL d — pre-trained then fine-tuned on d.
+    for d in [2usize, 5, 15] {
+        if d > setup.pool.len() {
+            break;
+        }
+        let pre = wb.pretrained("cognate", op, n_pre)?;
+        let idx: Vec<usize> = setup.pool.iter().copied().take(d).collect();
+        let mut tuned = pre.fork_for_finetune();
+        train(
+            &mut tuned,
+            &zenc,
+            &setup.target_ds,
+            &idx,
+            &[],
+            &wb.pipe.scale.finetune_opts.clone(),
+        )?;
+        let s = evaluate(&tuned, &zenc, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+        t.row(vec![
+            format!("TL {d} (CPU {n_pre})"),
+            (n_pre * cfgs_per).to_string(),
+            (d * cfgs_per).to_string(),
+            Table::f(s.geomean_speedup),
+            Table::f(s.ape),
+            Table::f(dce(n_pre, d)),
+        ]);
+    }
+    // CPU d — source-size sweep, fine-tuned on 5.
+    for n in [10usize, 25, 60] {
+        let pre = wb.pretrained("cognate", op, n)?;
+        let mut tuned = pre.fork_for_finetune();
+        train(
+            &mut tuned,
+            &zenc,
+            &setup.target_ds,
+            &setup.finetune_idx,
+            &[],
+            &wb.pipe.scale.finetune_opts.clone(),
+        )?;
+        let s = evaluate(&tuned, &zenc, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+        t.row(vec![
+            format!("CPU {n}"),
+            (n * cfgs_per).to_string(),
+            (setup.finetune_idx.len() * cfgs_per).to_string(),
+            Table::f(s.geomean_speedup),
+            Table::f(s.ape),
+            Table::f(dce(n, setup.finetune_idx.len())),
+        ]);
+    }
+    // Zero-shot.
+    let pre = wb.pretrained("cognate", op, n_pre)?;
+    let s = evaluate(&pre, &zenc, &setup.target_ds, &setup.eval_idx, setup.default_index, 1)?;
+    t.row(vec![
+        "Zero-Shot (CPU)".into(),
+        (n_pre * cfgs_per).to_string(),
+        "0".into(),
+        Table::f(s.geomean_speedup),
+        Table::f(s.ape),
+        Table::f(dce(n_pre, 0)),
+    ]);
+    Ok(vec![t])
+}
+
+/// Cross-platform landscape-correlation diagnostic (not a paper figure,
+/// but the premise of Fig 1's pipeline — reported alongside).
+pub fn correlation_diagnostic(pipe: &mut Pipeline, op: Op) -> Result<Table> {
+    let cpu = pipe.dataset(PlatformId::Cpu, op)?;
+    let spade = pipe.dataset(PlatformId::Spade, op)?;
+    let mut t = Table::new(
+        "diag: cpu↔spade optimal-config agreement",
+        &["matrix", "spearman_mapped_cost"],
+    );
+    for (rc, rs) in cpu.records.iter().zip(spade.records.iter()).take(12) {
+        // Correlate per-matrix cost over mapped (I, J) buckets.
+        let xs: Vec<f64> = rc.costs.iter().map(|c| c.ln()).collect();
+        let ys: Vec<f64> = rs.costs.iter().map(|c| c.ln()).collect();
+        let n = xs.len().min(ys.len());
+        let rho = stats::spearman(&xs[..n], &ys[..n]);
+        t.row(vec![rc.name.clone(), Table::f(rho)]);
+    }
+    Ok(t)
+}
+
+/// Convenience: run every experiment with one shared workbench, most
+/// informative first (so partial sweeps still yield the headline).
+pub fn run_all(pipe: &mut Pipeline) -> Result<()> {
+    let order = [
+        "table1", "fig4", "fig6", "fig5", "fig7", "fig9", "fig12", "fig10", "fig11", "table2",
+        "fig8", "fig2", "fig13", "fig14", "fig15",
+    ];
+    let mut wb = Workbench::new(pipe);
+    for id in order {
+        crate::info!("=== experiment {id} ===");
+        run_with(&mut wb, id)?;
+    }
+    Ok(())
+}
+
+// Silence unused-import warning for search::top_k re-export pathway.
+#[allow(unused_imports)]
+use search::top_k as _top_k;

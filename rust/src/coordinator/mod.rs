@@ -1,0 +1,236 @@
+//! L3 coordinator: the end-to-end DSE pipeline.
+//!
+//! Owns the shared state every experiment needs — the matrix
+//! collection, per-(platform, op) datasets (collected in parallel
+//! through the simulators and cached on disk), the PJRT runtime, and
+//! the scale knobs that shrink or grow experiments relative to the
+//! paper's (4M CPU-hour) setup.
+
+pub mod experiments;
+pub mod serve;
+
+use crate::config::PlatformId;
+use crate::dataset::Dataset;
+use crate::kernels::Op;
+use crate::model::AeDriver;
+use crate::platform::make_platform;
+use crate::runtime::{artifacts_dir, Runtime};
+use crate::sparse::{generate_collection, CollectionSpec, MatrixInfo};
+use crate::train::{config_features, train_autoencoder, TrainOpts, ZEncoder};
+use crate::util::pool::default_threads;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Experiment scale. `Scale::small()` runs the full pipeline in minutes
+/// on one machine; `--scale N` multiplies toward paper scale.
+#[derive(Clone, Debug)]
+pub struct Scale {
+    pub per_cell: usize,
+    pub max_dim: usize,
+    /// Source (CPU) matrices for pre-training (paper: 100).
+    pub pretrain_matrices: usize,
+    /// Target matrices for few-shot fine-tuning (paper: 5).
+    pub finetune_matrices: usize,
+    /// Held-out matrices for evaluation (paper: 715).
+    pub eval_matrices: usize,
+    pub pretrain_opts: TrainOpts,
+    pub finetune_opts: TrainOpts,
+    pub ae_steps: usize,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Scale {
+    pub fn small() -> Scale {
+        Scale {
+            per_cell: 3,
+            max_dim: 2048,
+            pretrain_matrices: 40,
+            finetune_matrices: 5,
+            eval_matrices: 20,
+            pretrain_opts: TrainOpts {
+                epochs: 8,
+                batches_per_epoch: 28,
+                val_matrices: 0,
+                ..TrainOpts::default()
+            },
+            finetune_opts: TrainOpts {
+                epochs: 5,
+                batches_per_epoch: 14,
+                val_matrices: 0,
+                ..TrainOpts::default()
+            },
+            ae_steps: 300,
+            threads: default_threads(),
+            seed: 0xC0C0_A7E0,
+        }
+    }
+
+    /// Multiply the small scale toward the paper's setup.
+    pub fn scaled(factor: usize) -> Scale {
+        let mut s = Scale::small();
+        if factor <= 1 {
+            return s;
+        }
+        s.per_cell = (s.per_cell * factor).min(50); // 50×6×5 = 1500 matrices
+        s.max_dim = (s.max_dim * factor.min(4)).min(16_384);
+        s.pretrain_matrices = (s.pretrain_matrices * factor).min(1000);
+        s.eval_matrices = (s.eval_matrices * factor).min(715);
+        s.pretrain_opts.epochs = (s.pretrain_opts.epochs * factor).min(100);
+        s.finetune_opts.epochs = (s.finetune_opts.epochs * factor).min(60);
+        s.ae_steps = (s.ae_steps * factor).min(3000);
+        s
+    }
+}
+
+pub struct Pipeline {
+    pub rt: Arc<Runtime>,
+    pub scale: Scale,
+    pub results_dir: PathBuf,
+    collection: Option<Vec<MatrixInfo>>,
+    datasets: HashMap<(PlatformId, Op), Arc<Dataset>>,
+}
+
+impl Pipeline {
+    pub fn new(scale: Scale) -> Result<Pipeline> {
+        let rt = Arc::new(Runtime::load(&artifacts_dir()).context("loading AOT artifacts")?);
+        Ok(Pipeline {
+            rt,
+            scale,
+            results_dir: PathBuf::from("results"),
+            collection: None,
+            datasets: HashMap::new(),
+        })
+    }
+
+    /// The matrix collection (generated once, deterministic).
+    pub fn collection(&mut self) -> &[MatrixInfo] {
+        if self.collection.is_none() {
+            let spec = CollectionSpec {
+                seed: self.scale.seed,
+                per_cell: self.scale.per_cell,
+                max_dim: self.scale.max_dim,
+            };
+            crate::info!(
+                "generating collection: {} matrices (max_dim={})",
+                5 * 6 * spec.per_cell,
+                spec.max_dim
+            );
+            self.collection = Some(generate_collection(&spec));
+        }
+        self.collection.as_ref().unwrap()
+    }
+
+    fn dataset_cache_path(&self, platform: PlatformId, op: Op) -> PathBuf {
+        self.results_dir.join("cache").join(format!(
+            "{}_{}_s{}_c{}_d{}.cds",
+            platform.name(),
+            op.name(),
+            self.scale.seed,
+            self.scale.per_cell,
+            self.scale.max_dim
+        ))
+    }
+
+    /// Dataset for (platform, op): disk cache → else collect in parallel.
+    pub fn dataset(&mut self, platform: PlatformId, op: Op) -> Result<Arc<Dataset>> {
+        if let Some(ds) = self.datasets.get(&(platform, op)) {
+            return Ok(ds.clone());
+        }
+        let path = self.dataset_cache_path(platform, op);
+        let ds = if path.exists() {
+            crate::info!("loading cached dataset {path:?}");
+            Dataset::load(&path)?
+        } else {
+            let threads = self.scale.threads;
+            let sim = make_platform(platform);
+            let coll: Vec<MatrixInfo> = self.collection().to_vec();
+            crate::info!(
+                "collecting {} × {} dataset over {} matrices ({threads} threads)",
+                platform.name(),
+                op.name(),
+                coll.len()
+            );
+            let t0 = std::time::Instant::now();
+            let ds = Dataset::collect(sim.as_ref(), op, &coll, threads);
+            crate::info!("collected in {:.1}s", t0.elapsed().as_secs_f64());
+            ds.save(&path)?;
+            ds
+        };
+        let ds = Arc::new(ds);
+        self.datasets.insert((platform, op), ds.clone());
+        Ok(ds)
+    }
+
+    /// Deterministic matrix splits for a dataset: (pretrain/finetune pool,
+    /// eval) — eval matrices never appear in any training set (§4.1).
+    pub fn splits(&self, ds: &Dataset) -> (Vec<usize>, Vec<usize>) {
+        let (train, eval) = ds.split(0.7, self.scale.seed ^ 0x517);
+        let eval: Vec<usize> =
+            eval.into_iter().take(self.scale.eval_matrices).collect();
+        (train, eval)
+    }
+
+    /// Pre-training matrix subset (size-binned sampling like §4.1).
+    pub fn pretrain_subset(&self, ds: &Dataset, pool: &[usize], n: usize) -> Vec<usize> {
+        // Bin by rows, sample round-robin across bins for balance.
+        let mut bins: Vec<Vec<usize>> = vec![Vec::new(); 5];
+        for &i in pool {
+            let r = ds.records[i].rows;
+            let b = match r {
+                0..=511 => 0,
+                512..=1023 => 1,
+                1024..=2047 => 2,
+                2048..=4095 => 3,
+                _ => 4,
+            };
+            bins[b].push(i);
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut cursor = vec![0usize; bins.len()];
+        'outer: loop {
+            let mut progressed = false;
+            for (b, bin) in bins.iter().enumerate() {
+                if cursor[b] < bin.len() {
+                    out.push(bin[cursor[b]]);
+                    cursor[b] += 1;
+                    progressed = true;
+                    if out.len() >= n {
+                        break 'outer;
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Train the per-target autoencoder (§3.3) and wrap it as a ZEncoder.
+    pub fn trained_ae(&mut self, platform: PlatformId, kind: &str, seed: i32) -> Result<ZEncoder> {
+        let mut ae = AeDriver::init(self.rt.clone(), kind, seed)?;
+        let het_dim = self.rt.dim("HET_DIM");
+        let latent = self.rt.dim("LATENT_DIM");
+        let batch = self.rt.dim("SCORE_B");
+        let feats = config_features(platform, 4096);
+        let losses = train_autoencoder(
+            &mut ae,
+            &feats.het,
+            het_dim,
+            latent,
+            self.scale.ae_steps,
+            batch,
+            self.scale.seed ^ 0xAE,
+        )?;
+        crate::info!(
+            "ae[{kind}/{}] trained: loss {:.4} → {:.4}",
+            platform.name(),
+            losses.first().copied().unwrap_or(f64::NAN as f32),
+            losses.last().copied().unwrap_or(f64::NAN as f32)
+        );
+        Ok(ZEncoder::Ae(ae))
+    }
+}

@@ -1,0 +1,258 @@
+//! Auto-tuning service: a threaded TCP server that accepts sparse
+//! matrices and replies with the predicted-best program configurations
+//! for a target platform — the "cost model as a service" deployment of
+//! the paper's artifact, structured like an inference router:
+//!
+//!   acceptor threads → bounded job queue → ONE batcher thread that
+//!   coalesces up to FEAT_B featurizations per PJRT call (dynamic
+//!   batching with a small linger window) → per-job top-k scoring →
+//!   reply channels.
+//!
+//! Protocol: one JSON object per line.
+//!   request:  {"id": 1, "k": 5, "rows": R, "cols": C,
+//!              "coo": [[r, c, v], ...]}
+//!   response: {"id": 1, "top": [cfg_idx, ...], "scores": [...],
+//!              "latency_ms": ..., "batched_with": n}
+
+use crate::dataset::MatrixRecord;
+use crate::model::ModelDriver;
+use crate::search::top_k;
+use crate::sparse::features::density_map;
+use crate::sparse::Csr;
+use crate::train::{config_features, ZEncoder};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+pub struct Job {
+    pub id: i64,
+    pub k: usize,
+    pub matrix: Csr,
+    pub reply: mpsc::Sender<Json>,
+    pub arrived: Instant,
+}
+
+/// Linger window for batch coalescing.
+pub const LINGER: Duration = Duration::from_millis(8);
+
+/// Run the service until `shutdown` jobs have been served (`None` = forever).
+/// Returns the bound address via the callback before serving.
+pub fn serve(
+    driver: ModelDriver,
+    zenc: ZEncoder,
+    platform: crate::config::PlatformId,
+    addr: &str,
+    max_jobs: Option<usize>,
+    on_ready: impl FnOnce(std::net::SocketAddr) + Send + 'static,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).context("bind")?;
+    let local = listener.local_addr()?;
+    let (tx, rx) = mpsc::channel::<Job>();
+
+    // Batcher thread: the only owner of the model driver.
+    let batcher = std::thread::spawn(move || batcher_loop(driver, zenc, platform, rx, max_jobs));
+    on_ready(local);
+
+    // Acceptor: one handler thread per connection (connections are few;
+    // the expensive resource — the model — is behind the queue anyway).
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, tx);
+        });
+        served += 1;
+        if let Some(m) = max_jobs {
+            if served >= m {
+                break;
+            }
+        }
+    }
+    drop(tx);
+    let _ = batcher.join();
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Json::parse(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                let err = Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]);
+                writeln!(writer, "{}", err.to_string())?;
+                continue;
+            }
+        };
+        match parse_request(&req) {
+            Ok((id, k, matrix)) => {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Job { id, k, matrix, reply: rtx, arrived: Instant::now() })
+                    .map_err(|_| anyhow::anyhow!("service shut down"))?;
+                let resp = rrx.recv().unwrap_or_else(|_| {
+                    Json::obj(vec![("error", Json::Str("batcher died".into()))])
+                });
+                writeln!(writer, "{}", resp.to_string())?;
+            }
+            Err(e) => {
+                let err = Json::obj(vec![("error", Json::Str(e.to_string()))]);
+                writeln!(writer, "{}", err.to_string())?;
+            }
+        }
+    }
+    crate::debug!("connection from {peer:?} closed");
+    Ok(())
+}
+
+fn parse_request(req: &Json) -> Result<(i64, usize, Csr)> {
+    let id = req.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
+    let k = req.get("k").and_then(|v| v.as_usize()).unwrap_or(5);
+    let rows = req.req("rows").as_usize().context("rows")?;
+    let cols = req.req("cols").as_usize().context("cols")?;
+    let coo_json = req.req("coo").as_arr().context("coo")?;
+    let mut coo = Vec::with_capacity(coo_json.len());
+    for e in coo_json {
+        let t = e.as_arr().context("coo entry")?;
+        anyhow::ensure!(t.len() >= 2, "coo entry needs [r, c] or [r, c, v]");
+        let r = t[0].as_usize().context("r")? as u32;
+        let c = t[1].as_usize().context("c")? as u32;
+        let v = t.get(2).and_then(|x| x.as_f64()).unwrap_or(1.0) as f32;
+        anyhow::ensure!((r as usize) < rows && (c as usize) < cols, "coo out of bounds");
+        coo.push((r, c, v));
+    }
+    Ok((id, k, Csr::from_coo(rows, cols, coo)))
+}
+
+fn batcher_loop(
+    driver: ModelDriver,
+    zenc: ZEncoder,
+    platform: crate::config::PlatformId,
+    rx: mpsc::Receiver<Job>,
+    max_jobs: Option<usize>,
+) {
+    let rt = driver.runtime().clone();
+    let (het_dim, latent_dim) = (rt.dim("HET_DIM"), rt.dim("LATENT_DIM"));
+    let feat_b = driver.feat_b();
+    let mut served = 0usize;
+    // het → z is matrix-independent: encode once up front.
+    let feats0 = config_features(platform, 4096);
+    let z_all = match zenc.encode(&feats0.het, het_dim, latent_dim) {
+        Ok(z) => z,
+        Err(e) => {
+            crate::warn!("batcher: z encoding failed: {e}");
+            return;
+        }
+    };
+
+    while let Ok(first) = rx.recv() {
+        // Dynamic batching: collect more jobs within the linger window,
+        // up to the featurizer batch width.
+        let mut batch = vec![first];
+        let deadline = Instant::now() + LINGER;
+        while batch.len() < feat_b {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => batch.push(job),
+                Err(_) => break,
+            }
+        }
+        let n_batched = batch.len();
+        let dmaps: Vec<Vec<f32>> = batch.iter().map(|j| density_map(&j.matrix)).collect();
+        let dmap_refs: Vec<&[f32]> = dmaps.iter().map(|d| d.as_slice()).collect();
+        let embeds = match driver.featurize(&dmap_refs) {
+            Ok(e) => e,
+            Err(e) => {
+                for job in &batch {
+                    let _ = job.reply.send(Json::obj(vec![(
+                        "error",
+                        Json::Str(format!("featurize: {e}")),
+                    )]));
+                }
+                continue;
+            }
+        };
+        for (job, embed) in batch.into_iter().zip(embeds) {
+            let feats = config_features(platform, job.matrix.cols);
+            let (cfg, _) = feats.cfg_for_variant(&driver.variant);
+            let resp = match driver.score_configs(&embed, cfg, &z_all) {
+                Ok(scores) => {
+                    let top = top_k(&scores, job.k);
+                    Json::obj(vec![
+                        ("id", Json::Num(job.id as f64)),
+                        ("top", Json::arr_usize(&top)),
+                        (
+                            "scores",
+                            Json::arr_f64(&top.iter().map(|&i| scores[i]).collect::<Vec<_>>()),
+                        ),
+                        (
+                            "latency_ms",
+                            Json::Num(job.arrived.elapsed().as_secs_f64() * 1e3),
+                        ),
+                        ("batched_with", Json::Num(n_batched as f64)),
+                    ])
+                }
+                Err(e) => Json::obj(vec![("error", Json::Str(format!("score: {e}")))]),
+            };
+            let _ = job.reply.send(resp);
+            served += 1;
+        }
+        if let Some(m) = max_jobs {
+            if served >= m {
+                break;
+            }
+        }
+    }
+}
+
+/// Blocking client helper (used by tests and the quickstart example).
+pub fn request(addr: std::net::SocketAddr, id: i64, k: usize, m: &Csr) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    let mut coo = Vec::new();
+    for r in 0..m.rows {
+        for (&c, &v) in m.row_indices(r).iter().zip(m.row_values(r)) {
+            coo.push(Json::Arr(vec![
+                Json::Num(r as f64),
+                Json::Num(c as f64),
+                Json::Num(v as f64),
+            ]));
+        }
+    }
+    let req = Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("k", Json::Num(k as f64)),
+        ("rows", Json::Num(m.rows as f64)),
+        ("cols", Json::Num(m.cols as f64)),
+        ("coo", Json::Arr(coo)),
+    ]);
+    writeln!(stream, "{}", req.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+/// Turn a request matrix into the record shape used by offline eval —
+/// handy for tests comparing online vs offline answers.
+pub fn record_for(m: &Csr, costs: Vec<f64>, name: &str) -> MatrixRecord {
+    MatrixRecord {
+        name: name.to_string(),
+        dmap: density_map(m),
+        cols: m.cols,
+        rows: m.rows,
+        nnz: m.nnz(),
+        costs,
+    }
+}

@@ -1,0 +1,288 @@
+//! Performance-dataset collection and persistence.
+//!
+//! For each (platform, op) we evaluate the full config space per matrix
+//! (the simulators share precomputation, so exhaustive evaluation is the
+//! cheap path) and store the complete cost vector. Training then samples
+//! `configs_per_matrix` entries per matrix exactly as the paper samples
+//! 100 random configurations, while evaluation gets the exhaustive
+//! oracle (`optimal_cost`) for free.
+//!
+//! Persistence is a small self-describing little-endian binary format
+//! (`.cds`), since bulk f32/f64 arrays in JSON would be slow and huge.
+
+use crate::config::PlatformId;
+use crate::kernels::Op;
+use crate::platform::CostModel;
+use crate::sparse::features::{density_map, DMAP_LEN};
+use crate::sparse::MatrixInfo;
+use crate::util::pool::par_map;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// All data the cost model ever sees about one matrix.
+#[derive(Clone, Debug)]
+pub struct MatrixRecord {
+    pub name: String,
+    /// Density map (C×H×W flattened) — the featurizer input.
+    pub dmap: Vec<f32>,
+    /// Matrix width (resolves SPADE's NUM_MATRIX_COLS configs).
+    pub cols: usize,
+    pub rows: usize,
+    pub nnz: usize,
+    /// Cost (cycles) of *every* config in the platform's space.
+    pub costs: Vec<f64>,
+}
+
+impl MatrixRecord {
+    pub fn optimal_cost(&self) -> f64 {
+        self.costs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn optimal_index(&self) -> usize {
+        self.costs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub platform: PlatformId,
+    pub op: Op,
+    pub records: Vec<MatrixRecord>,
+}
+
+impl Dataset {
+    /// Collect a dataset by running the platform cost model over every
+    /// matrix in parallel.
+    pub fn collect(
+        platform: &dyn CostModel,
+        op: Op,
+        matrices: &[MatrixInfo],
+        threads: usize,
+    ) -> Dataset {
+        let records = par_map(matrices, threads, |_, info| {
+            let costs = platform.eval_all(&info.matrix, op);
+            MatrixRecord {
+                name: info.name.clone(),
+                dmap: density_map(&info.matrix),
+                cols: info.matrix.cols,
+                rows: info.matrix.rows,
+                nnz: info.matrix.nnz(),
+                costs,
+            }
+        });
+        Dataset { platform: platform.id(), op, records }
+    }
+
+    /// Randomly sample `k` config indices per matrix (the paper's "100
+    /// program configurations per matrix"), deterministic in `seed`.
+    pub fn sample_configs(&self, k: usize, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(seed);
+        self.records
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut local = rng.fork(i as u64);
+                let k = k.min(r.costs.len());
+                local
+                    .sample_indices(r.costs.len(), k)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Split record indices into (train, val) deterministically.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+        let mut idx: Vec<usize> = (0..self.records.len()).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n_train = ((self.records.len() as f64) * train_frac).round() as usize;
+        let val = idx.split_off(n_train.min(idx.len()));
+        (idx, val)
+    }
+
+    // ---- persistence -------------------------------------------------------
+
+    const MAGIC: &'static [u8; 8] = b"COGNDS02";
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&(self.platform.index() as u32).to_le_bytes())?;
+        w.write_all(&((self.op == Op::Sddmm) as u32).to_le_bytes())?;
+        w.write_all(&(self.records.len() as u64).to_le_bytes())?;
+        for r in &self.records {
+            let name = r.name.as_bytes();
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name)?;
+            for v in [r.cols as u64, r.rows as u64, r.nnz as u64] {
+                w.write_all(&v.to_le_bytes())?;
+            }
+            w.write_all(&(r.dmap.len() as u64).to_le_bytes())?;
+            for &f in &r.dmap {
+                w.write_all(&f.to_le_bytes())?;
+            }
+            w.write_all(&(r.costs.len() as u64).to_le_bytes())?;
+            for &c in &r.costs {
+                w.write_all(&c.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let mut rd =
+            std::io::BufReader::new(std::fs::File::open(path).with_context(|| format!("{path:?}"))?);
+        let mut magic = [0u8; 8];
+        rd.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("bad dataset magic in {path:?}");
+        }
+        let platform = match read_u32(&mut rd)? {
+            0 => PlatformId::Cpu,
+            1 => PlatformId::Spade,
+            2 => PlatformId::Gpu,
+            x => bail!("bad platform id {x}"),
+        };
+        let op = if read_u32(&mut rd)? == 1 { Op::Sddmm } else { Op::Spmm };
+        let n = read_u64(&mut rd)? as usize;
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut rd)? as usize;
+            let mut name = vec![0u8; name_len];
+            rd.read_exact(&mut name)?;
+            let cols = read_u64(&mut rd)? as usize;
+            let rows = read_u64(&mut rd)? as usize;
+            let nnz = read_u64(&mut rd)? as usize;
+            let dmap_len = read_u64(&mut rd)? as usize;
+            if dmap_len != DMAP_LEN {
+                bail!("dmap length {dmap_len} != expected {DMAP_LEN} (stale dataset?)");
+            }
+            let mut dmap = vec![0f32; dmap_len];
+            for v in &mut dmap {
+                let mut b = [0u8; 4];
+                rd.read_exact(&mut b)?;
+                *v = f32::from_le_bytes(b);
+            }
+            let costs_len = read_u64(&mut rd)? as usize;
+            let mut costs = vec![0f64; costs_len];
+            for v in &mut costs {
+                let mut b = [0u8; 8];
+                rd.read_exact(&mut b)?;
+                *v = f64::from_le_bytes(b);
+            }
+            records.push(MatrixRecord {
+                name: String::from_utf8(name)?,
+                dmap,
+                cols,
+                rows,
+                nnz,
+                costs,
+            });
+        }
+        Ok(Dataset { platform, op, records })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::spade::SpadeSim;
+    use crate::sparse::{generate_collection, CollectionSpec};
+
+    fn tiny_collection() -> Vec<MatrixInfo> {
+        generate_collection(&CollectionSpec { seed: 5, per_cell: 1, max_dim: 384 })
+            .into_iter()
+            .take(4)
+            .collect()
+    }
+
+    #[test]
+    fn collect_and_roundtrip() {
+        let coll = tiny_collection();
+        let sim = SpadeSim::new();
+        let ds = Dataset::collect(&sim, Op::Spmm, &coll, 2);
+        assert_eq!(ds.records.len(), 4);
+        for r in &ds.records {
+            assert_eq!(r.costs.len(), 256);
+            assert_eq!(r.dmap.len(), DMAP_LEN);
+            assert!(r.optimal_cost() <= r.costs[0]);
+            assert_eq!(r.costs[r.optimal_index()], r.optimal_cost());
+        }
+        let dir = std::env::temp_dir().join("cognate_ds_test");
+        let path = dir.join("t.cds");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.platform, ds.platform);
+        assert_eq!(back.op, ds.op);
+        assert_eq!(back.records.len(), ds.records.len());
+        for (a, b) in back.records.iter().zip(&ds.records) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.costs, b.costs);
+            assert_eq!(a.dmap, b.dmap);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_distinct() {
+        let coll = tiny_collection();
+        let ds = Dataset::collect(&SpadeSim::new(), Op::Spmm, &coll, 2);
+        let s1 = ds.sample_configs(50, 9);
+        let s2 = ds.sample_configs(50, 9);
+        let s3 = ds.sample_configs(50, 10);
+        assert_eq!(s1, s2);
+        assert_ne!(s1, s3);
+        for per_mat in &s1 {
+            assert_eq!(per_mat.len(), 50);
+            let mut d = per_mat.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 50, "sampled configs must be distinct");
+        }
+    }
+
+    #[test]
+    fn split_partitions() {
+        let coll = tiny_collection();
+        let ds = Dataset::collect(&SpadeSim::new(), Op::Spmm, &coll, 2);
+        let (tr, va) = ds.split(0.5, 3);
+        assert_eq!(tr.len() + va.len(), ds.records.len());
+        let mut all: Vec<usize> = tr.iter().chain(va.iter()).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), ds.records.len());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("cognate_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.cds");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

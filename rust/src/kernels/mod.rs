@@ -1,0 +1,39 @@
+//! Executable sparse kernels: numerics-identical SpMM / SDDMM under
+//! configurable schedules, tested against naive oracles. These anchor
+//! the analytical platform cost models and power the GNN end-to-end
+//! example.
+
+pub mod sddmm;
+pub mod spmm;
+
+pub use sddmm::{sddmm_ref, sddmm_scheduled, SddmmSchedule};
+pub use spmm::{spmm_parallel, spmm_ref, spmm_scheduled, SpmmSchedule};
+
+/// Which sparse primitive a config / dataset / model targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    Spmm,
+    Sddmm,
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Spmm => "spmm",
+            Op::Sddmm => "sddmm",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Op> {
+        match s {
+            "spmm" => Some(Op::Spmm),
+            "sddmm" => Some(Op::Sddmm),
+            _ => None,
+        }
+    }
+}
+
+pub const ALL_OPS: [Op; 2] = [Op::Spmm, Op::Sddmm];
+
+/// Dense feature width N (SpMM) / K (SDDMM) used throughout evaluation —
+/// the paper's GNN-style setting uses a few hundred; we default to 128.
+pub const DENSE_DIM: usize = 128;

@@ -1,0 +1,40 @@
+//! # COGNATE — reproduction
+//!
+//! Rust + JAX + Pallas reproduction of *COGNATE: Acceleration of Sparse
+//! Tensor Programs on Emerging Hardware using Transfer Learning*
+//! (ICML 2025).
+//!
+//! COGNATE trains learned cost models for sparse tensor programs (SpMM,
+//! SDDMM) on a cheap source platform (CPU) and few-shot fine-tunes them
+//! for emerging accelerators (SPADE, GPU), by splitting program
+//! configurations into a homogeneous component (mapped into one unified
+//! strip-mining space by the φ/π functions of §3.2) and a heterogeneous
+//! component (compressed into a fixed latent by per-target autoencoders,
+//! §3.3).
+//!
+//! Architecture (see `DESIGN.md`):
+//! * **L3 (this crate)** — coordinator: matrix collection, platform
+//!   simulators, dataset collection, training/fine-tuning drivers,
+//!   top-k search, experiments, CLI, and a batched tuning service.
+//! * **L2 (`python/compile/model.py`)** — the cost model and its Adam
+//!   train step in JAX, AOT-lowered to HLO text once (`make artifacts`).
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels (tiled fused
+//!   matmul, conv-as-im2col, ranking loss) inside the L2 graph.
+//!
+//! Python never runs at request time: the `runtime` module loads the
+//! HLO artifacts through the PJRT C API (`xla` crate) and the rest is
+//! pure Rust.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod kernels;
+pub mod model;
+pub mod platform;
+pub mod runtime;
+pub mod search;
+pub mod sparse;
+pub mod train;
+pub mod util;

@@ -1,0 +1,9 @@
+//! `cognate` CLI entrypoint — see `cognate help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cognate::cli::main_inner(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

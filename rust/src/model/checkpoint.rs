@@ -1,0 +1,167 @@
+//! Model checkpointing: persist/restore a trained cost model's flat θ
+//! (plus optimiser state and provenance) so the CLI can split the
+//! pipeline across invocations (`pretrain` → file → `finetune` → file →
+//! `eval`/`serve`), exactly how the artifact would ship.
+//!
+//! Format: small self-describing little-endian binary, `.ckpt`.
+
+use super::ModelDriver;
+use crate::runtime::Runtime;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+const MAGIC: &[u8; 8] = b"COGCKPT1";
+
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub variant: String,
+    /// Free-form provenance (platform/op/epochs), recorded for humans.
+    pub note: String,
+    pub step: u64,
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn from_driver(d: &ModelDriver, note: &str) -> Checkpoint {
+        Checkpoint {
+            variant: d.variant.clone(),
+            note: note.to_string(),
+            step: d.step,
+            theta: d.theta.clone(),
+            m: d.m.clone(),
+            v: d.v.clone(),
+        }
+    }
+
+    /// Restore into a fresh driver (validates θ length vs the manifest).
+    pub fn into_driver(self, rt: Arc<Runtime>) -> Result<ModelDriver> {
+        let expect = *rt
+            .theta_len
+            .get(&self.variant)
+            .with_context(|| format!("manifest lacks variant {:?}", self.variant))?;
+        if self.theta.len() != expect {
+            bail!(
+                "checkpoint θ length {} != manifest {} — artifacts changed since saving?",
+                self.theta.len(),
+                expect
+            );
+        }
+        let mut d = ModelDriver::init(rt, &self.variant, 0)?;
+        d.theta = self.theta;
+        d.m = self.m;
+        d.v = self.v;
+        d.step = self.step;
+        Ok(d)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        for s in [&self.variant, &self.note] {
+            let b = s.as_bytes();
+            w.write_all(&(b.len() as u32).to_le_bytes())?;
+            w.write_all(b)?;
+        }
+        w.write_all(&self.step.to_le_bytes())?;
+        for buf in [&self.theta, &self.m, &self.v] {
+            w.write_all(&(buf.len() as u64).to_le_bytes())?;
+            for &f in buf.iter() {
+                w.write_all(&f.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a cognate checkpoint: {path:?}");
+        }
+        let mut read_str = |r: &mut dyn Read| -> Result<String> {
+            let mut lb = [0u8; 4];
+            r.read_exact(&mut lb)?;
+            let mut b = vec![0u8; u32::from_le_bytes(lb) as usize];
+            r.read_exact(&mut b)?;
+            Ok(String::from_utf8(b)?)
+        };
+        let variant = read_str(&mut r)?;
+        let note = read_str(&mut r)?;
+        let mut sb = [0u8; 8];
+        r.read_exact(&mut sb)?;
+        let step = u64::from_le_bytes(sb);
+        let mut read_f32s = |r: &mut dyn Read| -> Result<Vec<f32>> {
+            let mut lb = [0u8; 8];
+            r.read_exact(&mut lb)?;
+            let n = u64::from_le_bytes(lb) as usize;
+            let mut out = vec![0f32; n];
+            let mut fb = [0u8; 4];
+            for v in &mut out {
+                r.read_exact(&mut fb)?;
+                *v = f32::from_le_bytes(fb);
+            }
+            Ok(out)
+        };
+        let theta = read_f32s(&mut r)?;
+        let m = read_f32s(&mut r)?;
+        let v = read_f32s(&mut r)?;
+        if m.len() != theta.len() || v.len() != theta.len() {
+            bail!("checkpoint buffer lengths disagree");
+        }
+        Ok(Checkpoint { variant, note, step, theta, m, v })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(variant: &str, n: usize) -> Checkpoint {
+        Checkpoint {
+            variant: variant.into(),
+            note: "unit-test".into(),
+            step: 42,
+            theta: (0..n).map(|i| i as f32 * 0.5).collect(),
+            m: vec![0.1; n],
+            v: vec![0.2; n],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("cognate_ckpt_test");
+        let path = dir.join("a.ckpt");
+        let c = fake("cognate", 1000);
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.variant, c.variant);
+        assert_eq!(back.note, c.note);
+        assert_eq!(back.step, c.step);
+        assert_eq!(back.theta, c.theta);
+        assert_eq!(back.m, c.m);
+        assert_eq!(back.v, c.v);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let dir = std::env::temp_dir().join("cognate_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.ckpt");
+        std::fs::write(&bad, b"COGCKPT1 but truncated").unwrap();
+        assert!(Checkpoint::load(&bad).is_err());
+        std::fs::write(&bad, b"NOTMAGIC").unwrap();
+        assert!(Checkpoint::load(&bad).is_err());
+        std::fs::remove_file(&bad).ok();
+    }
+}

@@ -1,0 +1,280 @@
+//! Host-side cost-model driver: owns the flat parameter buffers (θ,
+//! Adam m/v) and drives the AOT train/featurize/score entry points
+//! through the PJRT runtime. One driver instance = one model variant
+//! being trained or served.
+
+pub mod checkpoint;
+pub mod pca;
+
+use crate::runtime::{Runtime, Tensor};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// A batch of ranking pairs, already encoded (see `train::encode`).
+/// All vectors are flattened row-major at the manifest's TRAIN_B batch.
+#[derive(Clone, Debug, Default)]
+pub struct TrainBatch {
+    pub dmap: Vec<f32>,  // [B, C, H, W]
+    pub cfg_a: Vec<f32>, // [B, cfg_dim]
+    pub z_a: Vec<f32>,   // [B, LATENT]
+    pub cfg_b: Vec<f32>,
+    pub z_b: Vec<f32>,
+    pub sign: Vec<f32>,   // [B]
+    pub weight: Vec<f32>, // [B] (0 ⇒ padded row)
+}
+
+pub struct ModelDriver {
+    rt: Arc<Runtime>,
+    pub variant: String,
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+    pub cfg_dim: usize,
+}
+
+impl ModelDriver {
+    /// Initialise fresh parameters via the `{variant}_init` artifact.
+    pub fn init(rt: Arc<Runtime>, variant: &str, seed: i32) -> Result<ModelDriver> {
+        let theta_len = *rt
+            .theta_len
+            .get(variant)
+            .with_context(|| format!("unknown variant {variant:?}"))?;
+        let out = rt.exec(&format!("{variant}_init"), &[Tensor::scalar_i32(seed)])?;
+        let theta = out.into_iter().next().context("init output")?.into_f32();
+        anyhow::ensure!(theta.len() == theta_len, "theta length mismatch");
+        let cfg_dim = if variant == "waco_fa" { rt.dim("FA_DIM") } else { rt.dim("MAPPED_DIM") };
+        Ok(ModelDriver {
+            rt,
+            variant: variant.to_string(),
+            m: vec![0.0; theta_len],
+            v: vec![0.0; theta_len],
+            theta,
+            step: 0,
+            cfg_dim,
+        })
+    }
+
+    /// Clone parameters into a new driver (e.g. pre-trained → fine-tune),
+    /// resetting the optimiser state as the paper's fine-tuning does.
+    pub fn fork_for_finetune(&self) -> ModelDriver {
+        ModelDriver {
+            rt: self.rt.clone(),
+            variant: self.variant.clone(),
+            theta: self.theta.clone(),
+            m: vec![0.0; self.theta.len()],
+            v: vec![0.0; self.theta.len()],
+            step: 0,
+            cfg_dim: self.cfg_dim,
+        }
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    pub fn train_b(&self) -> usize {
+        self.rt.dim("TRAIN_B")
+    }
+    pub fn feat_b(&self) -> usize {
+        self.rt.dim("FEAT_B")
+    }
+    pub fn score_b(&self) -> usize {
+        self.rt.dim("SCORE_B")
+    }
+    pub fn embed_dim(&self) -> usize {
+        self.rt.dim("EMBED_DIM")
+    }
+    pub fn latent_dim(&self) -> usize {
+        self.rt.dim("LATENT_DIM")
+    }
+    pub fn dmap_len(&self) -> usize {
+        self.rt.dim("DMAP_C") * self.rt.dim("DMAP_H") * self.rt.dim("DMAP_W")
+    }
+
+    /// One Adam step on a batch of pairs; returns the batch loss.
+    pub fn train_step(&mut self, batch: &TrainBatch) -> Result<f32> {
+        let b = self.train_b();
+        anyhow::ensure!(batch.sign.len() == b, "batch size {} != TRAIN_B {b}", batch.sign.len());
+        let (c, h, w) =
+            (self.rt.dim("DMAP_C"), self.rt.dim("DMAP_H"), self.rt.dim("DMAP_W"));
+        self.step += 1;
+        let lat = self.latent_dim();
+        let tl = self.theta.len();
+        let theta = std::mem::take(&mut self.theta);
+        let m = std::mem::take(&mut self.m);
+        let v = std::mem::take(&mut self.v);
+        let out = self.rt.exec(
+            &format!("{}_train", self.variant),
+            &[
+                Tensor::f32(theta, &[tl]),
+                Tensor::f32(m, &[tl]),
+                Tensor::f32(v, &[tl]),
+                Tensor::scalar_f32(self.step as f32),
+                Tensor::f32(batch.dmap.clone(), &[b, c, h, w]),
+                Tensor::f32(batch.cfg_a.clone(), &[b, self.cfg_dim]),
+                Tensor::f32(batch.z_a.clone(), &[b, lat]),
+                Tensor::f32(batch.cfg_b.clone(), &[b, self.cfg_dim]),
+                Tensor::f32(batch.z_b.clone(), &[b, lat]),
+                Tensor::f32(batch.sign.clone(), &[b]),
+                Tensor::f32(batch.weight.clone(), &[b]),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        self.theta = it.next().context("theta out")?.into_f32();
+        self.m = it.next().context("m out")?.into_f32();
+        self.v = it.next().context("v out")?.into_f32();
+        let loss = it.next().context("loss out")?.into_f32()[0];
+        Ok(loss)
+    }
+
+    /// Matrix embeddings for a set of density maps (padded to FEAT_B).
+    pub fn featurize(&self, dmaps: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let fb = self.feat_b();
+        let dl = self.dmap_len();
+        let ed = self.embed_dim();
+        let (c, h, w) =
+            (self.rt.dim("DMAP_C"), self.rt.dim("DMAP_H"), self.rt.dim("DMAP_W"));
+        let mut out = Vec::with_capacity(dmaps.len());
+        for chunk in dmaps.chunks(fb) {
+            let mut buf = vec![0f32; fb * dl];
+            for (i, d) in chunk.iter().enumerate() {
+                anyhow::ensure!(d.len() == dl, "density map length");
+                buf[i * dl..(i + 1) * dl].copy_from_slice(d);
+            }
+            let res = self.rt.exec(
+                &format!("{}_featurize", self.variant),
+                &[
+                    Tensor::f32(self.theta.clone(), &[self.theta.len()]),
+                    Tensor::f32(buf, &[fb, c, h, w]),
+                ],
+            )?;
+            let s = res.into_iter().next().context("featurize out")?.into_f32();
+            for i in 0..chunk.len() {
+                out.push(s[i * ed..(i + 1) * ed].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Score many configs of ONE matrix given its cached embedding.
+    /// `cfgs` / `zs` are row-major [n, cfg_dim] / [n, LATENT].
+    pub fn score_configs(&self, s_embed: &[f32], cfgs: &[f32], zs: &[f32]) -> Result<Vec<f64>> {
+        let sb = self.score_b();
+        let ed = self.embed_dim();
+        let lat = self.latent_dim();
+        anyhow::ensure!(s_embed.len() == ed, "embedding length");
+        let n = cfgs.len() / self.cfg_dim;
+        anyhow::ensure!(zs.len() == n * lat, "z rows");
+        let mut scores = Vec::with_capacity(n);
+        let mut s_tile = vec![0f32; sb * ed];
+        for row in 0..sb {
+            s_tile[row * ed..(row + 1) * ed].copy_from_slice(s_embed);
+        }
+        let mut start = 0usize;
+        while start < n {
+            let count = (n - start).min(sb);
+            let mut cbuf = vec![0f32; sb * self.cfg_dim];
+            let mut zbuf = vec![0f32; sb * lat];
+            cbuf[..count * self.cfg_dim]
+                .copy_from_slice(&cfgs[start * self.cfg_dim..(start + count) * self.cfg_dim]);
+            zbuf[..count * lat].copy_from_slice(&zs[start * lat..(start + count) * lat]);
+            let res = self.rt.exec(
+                &format!("{}_score_cached", self.variant),
+                &[
+                    Tensor::f32(self.theta.clone(), &[self.theta.len()]),
+                    Tensor::f32(s_tile.clone(), &[sb, ed]),
+                    Tensor::f32(cbuf, &[sb, self.cfg_dim]),
+                    Tensor::f32(zbuf, &[sb, lat]),
+                ],
+            )?;
+            let r = res.into_iter().next().context("score out")?.into_f32();
+            scores.extend(r[..count].iter().map(|&x| x as f64));
+            start += count;
+        }
+        Ok(scores)
+    }
+}
+
+/// Autoencoder driver (latent encoder of §3.3).
+pub struct AeDriver {
+    rt: Arc<Runtime>,
+    pub kind: String,
+    pub theta: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: u64,
+}
+
+impl AeDriver {
+    pub fn init(rt: Arc<Runtime>, kind: &str, seed: i32) -> Result<AeDriver> {
+        let theta_len = *rt.theta_len.get(kind).with_context(|| format!("ae kind {kind:?}"))?;
+        let out = rt.exec(&format!("{kind}_init"), &[Tensor::scalar_i32(seed)])?;
+        let theta = out.into_iter().next().context("ae init")?.into_f32();
+        anyhow::ensure!(theta.len() == theta_len);
+        Ok(AeDriver {
+            rt,
+            kind: kind.to_string(),
+            m: vec![0.0; theta_len],
+            v: vec![0.0; theta_len],
+            theta,
+            step: 0,
+        })
+    }
+
+    /// One unsupervised step on a batch of het vectors [SCORE_B, HET_DIM].
+    pub fn train_step(&mut self, x: &[f32], eps: &[f32]) -> Result<f32> {
+        let b = self.rt.dim("SCORE_B");
+        let hd = self.rt.dim("HET_DIM");
+        let lat = self.rt.dim("LATENT_DIM");
+        anyhow::ensure!(x.len() == b * hd, "ae batch shape");
+        anyhow::ensure!(eps.len() == b * lat, "ae eps shape");
+        self.step += 1;
+        let tl = self.theta.len();
+        let theta = std::mem::take(&mut self.theta);
+        let m = std::mem::take(&mut self.m);
+        let v = std::mem::take(&mut self.v);
+        let out = self.rt.exec(
+            &format!("{}_train", self.kind),
+            &[
+                Tensor::f32(theta, &[tl]),
+                Tensor::f32(m, &[tl]),
+                Tensor::f32(v, &[tl]),
+                Tensor::scalar_f32(self.step as f32),
+                Tensor::f32(x.to_vec(), &[b, hd]),
+                Tensor::f32(eps.to_vec(), &[b, lat]),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        self.theta = it.next().context("ae theta")?.into_f32();
+        self.m = it.next().context("ae m")?.into_f32();
+        self.v = it.next().context("ae v")?.into_f32();
+        Ok(it.next().context("ae loss")?.into_f32()[0])
+    }
+
+    /// Encode het vectors → latent z, in SCORE_B chunks with padding.
+    pub fn encode(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let b = self.rt.dim("SCORE_B");
+        let hd = self.rt.dim("HET_DIM");
+        let lat = self.rt.dim("LATENT_DIM");
+        let n = x.len() / hd;
+        let mut out = Vec::with_capacity(n * lat);
+        let mut start = 0;
+        while start < n {
+            let count = (n - start).min(b);
+            let mut buf = vec![0f32; b * hd];
+            buf[..count * hd].copy_from_slice(&x[start * hd..(start + count) * hd]);
+            let res = self.rt.exec(
+                &format!("{}_encode", self.kind),
+                &[
+                    Tensor::f32(self.theta.clone(), &[self.theta.len()]),
+                    Tensor::f32(buf, &[b, hd]),
+                ],
+            )?;
+            let z = res.into_iter().next().context("ae encode")?.into_f32();
+            out.extend_from_slice(&z[..count * lat]);
+            start += count;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,204 @@
+//! Host-side PCA encoder — the Fig 9 baseline for representing the
+//! heterogeneous configuration component (vs. the autoencoder).
+//!
+//! Classical PCA on the het vectors: covariance → Jacobi eigensolver
+//! (the het dimension is 16, so an O(d³)-per-sweep dense solver is
+//! instant) → project onto the top components → zero-pad to LATENT_DIM
+//! so the output is drop-in compatible with the z-input of the model.
+
+/// Symmetric Jacobi eigendecomposition: returns (eigenvalues,
+/// eigenvectors-as-rows), sorted by descending eigenvalue.
+pub fn jacobi_eigen(a: &[f64], d: usize, sweeps: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), d * d);
+    let mut m = a.to_vec();
+    let mut v = vec![0f64; d * d];
+    for i in 0..d {
+        v[i * d + i] = 1.0;
+    }
+    for _ in 0..sweeps {
+        let mut off = 0.0;
+        for p in 0..d {
+            for q in (p + 1)..d {
+                off += m[p * d + q] * m[p * d + q];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m[p * d + q];
+                if apq.abs() < 1e-18 {
+                    continue;
+                }
+                let app = m[p * d + p];
+                let aqq = m[q * d + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..d {
+                    let mkp = m[k * d + p];
+                    let mkq = m[k * d + q];
+                    m[k * d + p] = c * mkp - s * mkq;
+                    m[k * d + q] = s * mkp + c * mkq;
+                }
+                for k in 0..d {
+                    let mpk = m[p * d + k];
+                    let mqk = m[q * d + k];
+                    m[p * d + k] = c * mpk - s * mqk;
+                    m[q * d + k] = s * mpk + c * mqk;
+                }
+                for k in 0..d {
+                    let vkp = v[k * d + p];
+                    let vkq = v[k * d + q];
+                    v[k * d + p] = c * vkp - s * vkq;
+                    v[k * d + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..d).collect();
+    let evals: Vec<f64> = (0..d).map(|i| m[i * d + i]).collect();
+    order.sort_by(|&a, &b| evals[b].partial_cmp(&evals[a]).unwrap());
+    let sorted_vals: Vec<f64> = order.iter().map(|&i| evals[i]).collect();
+    let mut rows = vec![0f64; d * d];
+    for (r, &i) in order.iter().enumerate() {
+        for k in 0..d {
+            rows[r * d + k] = v[k * d + i]; // column i of V → row r
+        }
+    }
+    (sorted_vals, rows)
+}
+
+pub struct Pca {
+    pub dim: usize,
+    pub components: usize,
+    pub mean: Vec<f64>,
+    /// [components, dim] projection rows.
+    pub basis: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit on row-major samples `x` ([n, dim]).
+    pub fn fit(x: &[f32], dim: usize, components: usize) -> Pca {
+        let n = x.len() / dim;
+        assert!(n > 1, "need at least 2 samples");
+        let components = components.min(dim);
+        let mut mean = vec![0f64; dim];
+        for row in 0..n {
+            for j in 0..dim {
+                mean[j] += x[row * dim + j] as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut cov = vec![0f64; dim * dim];
+        for row in 0..n {
+            for i in 0..dim {
+                let di = x[row * dim + i] as f64 - mean[i];
+                for j in i..dim {
+                    cov[i * dim + j] += di * (x[row * dim + j] as f64 - mean[j]);
+                }
+            }
+        }
+        for i in 0..dim {
+            for j in 0..i {
+                cov[i * dim + j] = cov[j * dim + i];
+            }
+        }
+        for c in &mut cov {
+            *c /= (n - 1) as f64;
+        }
+        let (_vals, vecs) = jacobi_eigen(&cov, dim, 30);
+        Pca { dim, components, mean, basis: vecs[..components * dim].to_vec() }
+    }
+
+    /// Project samples into the component space, zero-padded to `out_dim`.
+    pub fn encode(&self, x: &[f32], out_dim: usize) -> Vec<f32> {
+        let n = x.len() / self.dim;
+        let mut out = vec![0f32; n * out_dim];
+        for row in 0..n {
+            for c in 0..self.components.min(out_dim) {
+                let mut acc = 0f64;
+                for j in 0..self.dim {
+                    acc += (x[row * self.dim + j] as f64 - self.mean[j])
+                        * self.basis[c * self.dim + j];
+                }
+                out[row * out_dim + c] = acc as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2, 1], [1, 2]] has eigenvalues 3 and 1.
+        let (vals, vecs) = jacobi_eigen(&[2.0, 1.0, 1.0, 2.0], 2, 20);
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 1.0).abs() < 1e-10);
+        // Eigenvector for 3 is (1,1)/√2 up to sign.
+        let r = &vecs[0..2];
+        assert!((r[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-8);
+        assert!((r[0] - r[1]).abs() < 1e-8);
+    }
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        // Points along (3, 1) with small noise.
+        let mut rng = Rng::new(1);
+        let mut x = Vec::new();
+        for _ in 0..500 {
+            let t = rng.next_gaussian();
+            x.push((3.0 * t + 0.01 * rng.next_gaussian()) as f32);
+            x.push((t + 0.01 * rng.next_gaussian()) as f32);
+        }
+        let pca = Pca::fit(&x, 2, 1);
+        let dir = (pca.basis[0], pca.basis[1]);
+        let norm = (dir.0 * dir.0 + dir.1 * dir.1).sqrt();
+        let cos = (3.0 * dir.0 + dir.1) / (10f64.sqrt() * norm);
+        assert!(cos.abs() > 0.999, "cos={cos}");
+    }
+
+    #[test]
+    fn encode_shape_and_padding() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..64 * 16).map(|_| rng.next_f32()).collect();
+        let pca = Pca::fit(&x, 16, 8);
+        let z = pca.encode(&x[..16], 64);
+        assert_eq!(z.len(), 64);
+        assert!(z[8..].iter().all(|&v| v == 0.0), "padding must be zero");
+    }
+
+    #[test]
+    fn reconstruction_error_decreases_with_components() {
+        let mut rng = Rng::new(3);
+        // Low-rank-ish data: 3 latent factors in 16 dims.
+        let mix: Vec<f64> = (0..3 * 16).map(|_| rng.next_gaussian()).collect();
+        let mut x = Vec::new();
+        for _ in 0..300 {
+            let f = [rng.next_gaussian(), rng.next_gaussian(), rng.next_gaussian()];
+            for j in 0..16 {
+                let v: f64 = (0..3).map(|k| f[k] * mix[k * 16 + j]).sum();
+                x.push(v as f32 + 0.01 * rng.next_gaussian() as f32);
+            }
+        }
+        let err = |comps: usize| -> f64 {
+            let pca = Pca::fit(&x, 16, comps);
+            // Project then measure captured variance via encoded norms.
+            let z = pca.encode(&x, comps);
+            let total: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let captured: f64 = z.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            1.0 - captured / total
+        };
+        assert!(err(3) < err(1), "more components capture more variance");
+        assert!(err(3) < 0.2, "3 components should capture a rank-3 signal");
+    }
+}

@@ -1,0 +1,124 @@
+//! Platform cost models: CPU (source), SPADE accelerator and GPU
+//! (targets). Each exposes the same interface via [`CostModel`] so the
+//! dataset collector, search, and experiments are platform-agnostic.
+
+pub mod cpu;
+pub mod gpu;
+pub mod roofline;
+pub mod spade;
+pub mod tiles;
+
+use crate::config::{Config, PlatformId};
+use crate::kernels::Op;
+use crate::sparse::Csr;
+
+/// A platform's deterministic cost model over its config space.
+pub trait CostModel: Sync + Send {
+    fn id(&self) -> PlatformId;
+    /// Per-sample data-collection cost β (Appendix A.3's DCE weights).
+    fn beta(&self) -> f64;
+    fn num_configs(&self) -> usize;
+    fn config(&self, idx: usize) -> Config;
+    /// Index of the programming system's default schedule (baseline).
+    fn default_index(&self) -> usize;
+    /// Cost (cycles) of every config for one matrix.
+    fn eval_all(&self, m: &Csr, op: Op) -> Vec<f64>;
+}
+
+impl CostModel for cpu::CpuSim {
+    fn id(&self) -> PlatformId {
+        PlatformId::Cpu
+    }
+    fn beta(&self) -> f64 {
+        cpu::BETA
+    }
+    fn num_configs(&self) -> usize {
+        self.num_configs()
+    }
+    fn config(&self, idx: usize) -> Config {
+        self.config(idx)
+    }
+    fn default_index(&self) -> usize {
+        self.default_index()
+    }
+    fn eval_all(&self, m: &Csr, op: Op) -> Vec<f64> {
+        self.eval_all(m, op)
+    }
+}
+
+impl CostModel for spade::SpadeSim {
+    fn id(&self) -> PlatformId {
+        PlatformId::Spade
+    }
+    fn beta(&self) -> f64 {
+        spade::BETA
+    }
+    fn num_configs(&self) -> usize {
+        self.num_configs()
+    }
+    fn config(&self, idx: usize) -> Config {
+        self.config(idx)
+    }
+    fn default_index(&self) -> usize {
+        self.default_index()
+    }
+    fn eval_all(&self, m: &Csr, op: Op) -> Vec<f64> {
+        self.eval_all(m, op)
+    }
+}
+
+impl CostModel for gpu::GpuSim {
+    fn id(&self) -> PlatformId {
+        PlatformId::Gpu
+    }
+    fn beta(&self) -> f64 {
+        gpu::BETA
+    }
+    fn num_configs(&self) -> usize {
+        self.num_configs()
+    }
+    fn config(&self, idx: usize) -> Config {
+        self.config(idx)
+    }
+    fn default_index(&self) -> usize {
+        self.default_index()
+    }
+    fn eval_all(&self, m: &Csr, op: Op) -> Vec<f64> {
+        self.eval_all(m, op)
+    }
+}
+
+/// Instantiate a platform by id.
+pub fn make_platform(id: PlatformId) -> Box<dyn CostModel> {
+    match id {
+        PlatformId::Cpu => Box::new(cpu::CpuSim::new()),
+        PlatformId::Spade => Box::new(spade::SpadeSim::new()),
+        PlatformId::Gpu => Box::new(gpu::GpuSim::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{generate, Family};
+
+    #[test]
+    fn trait_objects_work_for_all_platforms() {
+        let m = generate(Family::Uniform, 300, 300, 0.02, 1);
+        for id in [PlatformId::Cpu, PlatformId::Spade, PlatformId::Gpu] {
+            let p = make_platform(id);
+            assert_eq!(p.id(), id);
+            assert!(p.beta() > 0.0);
+            let costs = p.eval_all(&m, Op::Spmm);
+            assert_eq!(costs.len(), p.num_configs());
+            assert!(p.default_index() < p.num_configs());
+            let _ = p.config(0);
+        }
+    }
+
+    #[test]
+    fn betas_reflect_appendix_a() {
+        assert_eq!(make_platform(PlatformId::Cpu).beta(), 1.0);
+        assert_eq!(make_platform(PlatformId::Spade).beta(), 1000.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! TPU roofline / VMEM-footprint estimator for the L1 Pallas kernels.
+//!
+//! Pallas runs `interpret=True` on the CPU plugin, so real-TPU
+//! performance cannot be measured here; DESIGN.md commits to
+//! *estimating* MXU utilisation and VMEM pressure from the BlockSpec
+//! parameters instead. This module is that estimator: given the tile
+//! shapes the AOT kernels use, it reports footprint, arithmetic
+//! intensity and the roofline-limited utilisation a TPU-v4-class core
+//! would see — numbers quoted in EXPERIMENTS.md §Perf.
+
+/// TPU-v4-ish core parameters.
+pub const VMEM_BYTES: f64 = 16.0 * 1024.0 * 1024.0;
+pub const MXU_FLOPS_PER_S: f64 = 137.5e12; // bf16 peak per core pair
+pub const HBM_BYTES_PER_S: f64 = 1.2e12;
+/// MXU systolic tile.
+pub const MXU_DIM: usize = 128;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulTile {
+    pub block_m: usize,
+    pub block_n: usize,
+    /// Full reduction depth held in VMEM (our kernels keep K un-tiled).
+    pub k: usize,
+    /// Bytes per element (4 = f32; 2 = bf16 on real MXU inputs).
+    pub elem_bytes: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RooflineEstimate {
+    /// LHS + RHS + acc + bias tile bytes resident in VMEM.
+    pub vmem_bytes: f64,
+    pub vmem_fraction: f64,
+    /// FLOPs per byte of HBM traffic for one output tile.
+    pub arithmetic_intensity: f64,
+    /// min(1, AI / ridge) — fraction of MXU peak the schedule can reach.
+    pub mxu_utilization: f64,
+    /// How well the tile shape fills the 128×128 systolic array.
+    pub mxu_fill: f64,
+}
+
+pub fn estimate_matmul(t: &MatmulTile) -> RooflineEstimate {
+    let eb = t.elem_bytes as f64;
+    let (m, n, k) = (t.block_m as f64, t.block_n as f64, t.k as f64);
+    let vmem = (m * k + k * n + m * n) * eb + n * eb; // + bias row
+    // One output tile: read its operand panels once, write once.
+    let bytes = (m * k + k * n + m * n) * eb;
+    let flops = 2.0 * m * n * k;
+    let ai = flops / bytes;
+    let ridge = MXU_FLOPS_PER_S / HBM_BYTES_PER_S;
+    let util = (ai / ridge).min(1.0);
+    // Systolic fill: partial tiles waste lanes.
+    let fill_m = (t.block_m as f64 / MXU_DIM as f64).min(1.0)
+        * (MXU_DIM as f64 / (t.block_m as f64 / (t.block_m as f64 / MXU_DIM as f64).ceil())).min(1.0);
+    let fill_n = (t.block_n.min(MXU_DIM) as f64) / MXU_DIM as f64;
+    RooflineEstimate {
+        vmem_bytes: vmem,
+        vmem_fraction: vmem / VMEM_BYTES,
+        arithmetic_intensity: ai,
+        mxu_utilization: util,
+        mxu_fill: fill_m.min(1.0) * fill_n,
+    }
+}
+
+/// The tiles the shipped kernels actually use, per model stage
+/// (mirrors python/compile: conv im2col rows = B·H·W, K = Cin·k²).
+pub fn model_tiles(block_m: usize, block_n: usize) -> Vec<(&'static str, MatmulTile)> {
+    vec![
+        (
+            "featurizer conv1 (im2col 5×5×4→8)",
+            MatmulTile { block_m, block_n: block_n.min(8), k: 100, elem_bytes: 4 },
+        ),
+        (
+            "featurizer conv deep (3×3×64→64)",
+            MatmulTile { block_m, block_n: block_n.min(64), k: 576, elem_bytes: 4 },
+        ),
+        (
+            "predictor layer 1 (256→128)",
+            MatmulTile { block_m: 64, block_n: block_n.min(128), k: 256, elem_bytes: 4 },
+        ),
+        (
+            "config mapper (53→64)",
+            MatmulTile { block_m: 64, block_n: block_n.min(64), k: 53, elem_bytes: 4 },
+        ),
+    ]
+}
+
+/// Render the §Perf table body.
+pub fn report(block_m: usize, block_n: usize) -> crate::util::table::Table {
+    let mut t = crate::util::table::Table::new(
+        &format!("TPU roofline estimates (BLOCK_M={block_m}, BLOCK_N={block_n})"),
+        &["stage", "vmem_KiB", "vmem_frac", "flops_per_byte", "mxu_util", "mxu_fill"],
+    );
+    for (name, tile) in model_tiles(block_m, block_n) {
+        let e = estimate_matmul(&tile);
+        t.row(vec![
+            name.into(),
+            format!("{:.0}", e.vmem_bytes / 1024.0),
+            format!("{:.4}", e.vmem_fraction),
+            format!("{:.1}", e.arithmetic_intensity),
+            format!("{:.2}", e.mxu_utilization),
+            format!("{:.2}", e.mxu_fill),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mxu_square_tile_fits_vmem_comfortably() {
+        let e = estimate_matmul(&MatmulTile { block_m: 128, block_n: 128, k: 1152, elem_bytes: 4 });
+        assert!(e.vmem_fraction < 0.1, "vmem {:.3}", e.vmem_fraction);
+        // AI of a square 128 tile with K=1152: 2·128²·1152 / (3.1e5·4B) ≈ 30.
+        assert!(e.arithmetic_intensity > 25.0, "ai {:.1}", e.arithmetic_intensity);
+    }
+
+    #[test]
+    fn widening_m_raises_intensity_until_ridge() {
+        let a = estimate_matmul(&MatmulTile { block_m: 128, block_n: 128, k: 256, elem_bytes: 4 });
+        let b = estimate_matmul(&MatmulTile { block_m: 1024, block_n: 128, k: 256, elem_bytes: 4 });
+        assert!(b.arithmetic_intensity > a.arithmetic_intensity);
+        assert!(b.vmem_bytes > a.vmem_bytes);
+        assert!(b.vmem_fraction < 1.0, "1024-row tile must still fit VMEM");
+    }
+
+    #[test]
+    fn tiny_n_wastes_the_array() {
+        let e = estimate_matmul(&MatmulTile { block_m: 128, block_n: 8, k: 100, elem_bytes: 4 });
+        assert!(e.mxu_fill < 0.1, "8-wide output cannot fill a 128-wide MXU");
+    }
+
+    #[test]
+    fn report_renders_all_stages() {
+        let t = report(1024, 128);
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.render().contains("predictor"));
+    }
+
+    #[test]
+    fn bf16_halves_footprint() {
+        let f32t = estimate_matmul(&MatmulTile { block_m: 128, block_n: 128, k: 512, elem_bytes: 4 });
+        let bf16 = estimate_matmul(&MatmulTile { block_m: 128, block_n: 128, k: 512, elem_bytes: 2 });
+        assert!((bf16.vmem_bytes - f32t.vmem_bytes / 2.0).abs() < 1.0);
+    }
+}

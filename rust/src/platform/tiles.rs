@@ -1,0 +1,240 @@
+//! Tile-grid precomputation shared by the platform cost models.
+//!
+//! Every analytical model in this crate keys on the same two per-tile
+//! quantities: `nnz` (compute) and `ucols` (distinct columns touched —
+//! the dense-operand working set that determines reuse in a cache /
+//! scratchpad / L2). A `TileGrid` materialises those for a (row-panel ×
+//! col-panel) tiling in a single O(nnz) pass over the CSR structure.
+
+use crate::sparse::Csr;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TileInfo {
+    pub nnz: u32,
+    /// Distinct columns touched by this tile (unioned over its rows).
+    pub ucols: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TileGrid {
+    /// Rows per row panel.
+    pub row_panel: usize,
+    /// Columns per column panel.
+    pub col_panel: usize,
+    pub n_row_panels: usize,
+    pub n_col_panels: usize,
+    /// Row-panel-major tile infos: `tiles[p * n_col_panels + t]`.
+    pub tiles: Vec<TileInfo>,
+    /// nnz per row panel.
+    pub panel_nnz: Vec<u32>,
+    /// Rows in each row panel (last may be short).
+    pub panel_rows: Vec<u32>,
+    /// Coefficient of variation of row lengths within each row panel —
+    /// mixed-length rows stall a PE's row pipeline (SPADE reordering
+    /// exists precisely to shrink this).
+    pub panel_rowlen_cv: Vec<f64>,
+}
+
+impl TileGrid {
+    pub fn tile(&self, panel: usize, col_tile: usize) -> TileInfo {
+        self.tiles[panel * self.n_col_panels + col_tile]
+    }
+
+    /// Distinct columns across a whole column panel (union over all row
+    /// panels) — the phase working set under barrier-synchronised
+    /// (column-panel-major) execution.
+    pub fn col_phase_ucols(&self, m: &Csr) -> Vec<u32> {
+        let mut col_used = vec![false; m.cols];
+        for &c in &m.indices {
+            col_used[c as usize] = true;
+        }
+        let mut out = vec![0u32; self.n_col_panels];
+        for (c, &used) in col_used.iter().enumerate() {
+            if used {
+                out[c / self.col_panel] += 1;
+            }
+        }
+        out
+    }
+}
+
+/// Build the grid in one pass. `row_panel`/`col_panel` are clamped to the
+/// matrix dims so degenerate configs (panel larger than the matrix)
+/// behave like "one panel".
+pub fn tile_grid(m: &Csr, row_panel: usize, col_panel: usize) -> TileGrid {
+    let rp = row_panel.clamp(1, m.rows.max(1));
+    let cp = col_panel.clamp(1, m.cols.max(1));
+    let n_row_panels = m.rows.div_ceil(rp).max(1);
+    let n_col_panels = m.cols.div_ceil(cp).max(1);
+    let mut tiles = vec![TileInfo::default(); n_row_panels * n_col_panels];
+    let mut panel_nnz = vec![0u32; n_row_panels];
+    let mut panel_rows = vec![0u32; n_row_panels];
+    let mut panel_rowlen_cv = vec![0f64; n_row_panels];
+    // Column stamp: last row panel that saw this column.
+    let mut stamp = vec![u32::MAX; m.cols];
+    for p in 0..n_row_panels {
+        let r0 = p * rp;
+        let r1 = ((p + 1) * rp).min(m.rows);
+        panel_rows[p] = (r1 - r0) as u32;
+        let base = p * n_col_panels;
+        for r in r0..r1 {
+            for &c in m.row_indices(r) {
+                let t = c as usize / cp;
+                let ti = &mut tiles[base + t];
+                ti.nnz += 1;
+                if stamp[c as usize] != p as u32 {
+                    stamp[c as usize] = p as u32;
+                    ti.ucols += 1;
+                }
+            }
+        }
+        panel_nnz[p] = (m.indptr[r1] - m.indptr[r0]) as u32;
+        // Row-length CV within the panel.
+        let nr = (r1 - r0) as f64;
+        if nr > 1.0 {
+            let mean = panel_nnz[p] as f64 / nr;
+            if mean > 0.0 {
+                let var = (r0..r1)
+                    .map(|r| {
+                        let l = (m.indptr[r + 1] - m.indptr[r]) as f64;
+                        (l - mean) * (l - mean)
+                    })
+                    .sum::<f64>()
+                    / nr;
+                panel_rowlen_cv[p] = var.sqrt() / mean;
+            }
+        }
+    }
+    TileGrid {
+        row_panel: rp,
+        col_panel: cp,
+        n_row_panels,
+        n_col_panels,
+        tiles,
+        panel_nnz,
+        panel_rows,
+        panel_rowlen_cv,
+    }
+}
+
+/// Greedy LPT makespan: assign `costs` (any order) to `workers` bins,
+/// largest first, each to the currently least-loaded bin. Returns
+/// (makespan, mean load). The standard 4/3-approximation — good enough
+/// to model a dynamic tile scheduler.
+pub fn makespan(costs: &[f64], workers: usize) -> (f64, f64) {
+    let workers = workers.max(1);
+    if costs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let total: f64 = costs.iter().sum();
+    let mean = total / workers as f64;
+    if costs.len() <= workers {
+        let mx = costs.iter().cloned().fold(0.0, f64::max);
+        return (mx.max(mean), mean);
+    }
+    let mut sorted: Vec<f64> = costs.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // Binary-heap-free least-loaded tracking: workers is small (≤ 128).
+    let mut loads = vec![0.0f64; workers];
+    for c in sorted {
+        let (argmin, _) = loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        loads[argmin] += c;
+    }
+    let mk = loads.iter().cloned().fold(0.0, f64::max);
+    (mk, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{generate, Family};
+
+    #[test]
+    fn grid_conserves_nnz() {
+        let m = generate(Family::Rmat, 300, 500, 0.02, 1);
+        for &(rp, cp) in &[(4usize, 64usize), (32, 1024), (1000, 100), (7, 13)] {
+            let g = tile_grid(&m, rp, cp);
+            let tile_sum: u32 = g.tiles.iter().map(|t| t.nnz).sum();
+            assert_eq!(tile_sum as usize, m.nnz(), "rp={rp} cp={cp}");
+            let panel_sum: u32 = g.panel_nnz.iter().sum();
+            assert_eq!(panel_sum as usize, m.nnz());
+            let rows_sum: u32 = g.panel_rows.iter().sum();
+            assert_eq!(rows_sum as usize, m.rows);
+        }
+    }
+
+    #[test]
+    fn ucols_bounds() {
+        let m = generate(Family::PowerLaw, 256, 256, 0.03, 2);
+        let g = tile_grid(&m, 32, 64);
+        for t in &g.tiles {
+            assert!(t.ucols <= t.nnz);
+            assert!(t.ucols as usize <= 64); // within the col panel
+        }
+    }
+
+    #[test]
+    fn single_panel_grid_ucols_is_total_distinct() {
+        let m = generate(Family::Uniform, 200, 300, 0.01, 3);
+        let g = tile_grid(&m, m.rows, m.cols);
+        assert_eq!(g.n_row_panels, 1);
+        assert_eq!(g.n_col_panels, 1);
+        let mut used = vec![false; m.cols];
+        for &c in &m.indices {
+            used[c as usize] = true;
+        }
+        let distinct = used.iter().filter(|&&u| u).count();
+        assert_eq!(g.tile(0, 0).ucols as usize, distinct);
+    }
+
+    #[test]
+    fn col_phase_ucols_sums_to_distinct_cols() {
+        let m = generate(Family::Banded, 400, 400, 0.01, 4);
+        let g = tile_grid(&m, 64, 100);
+        let phases = g.col_phase_ucols(&m);
+        assert_eq!(phases.len(), g.n_col_panels);
+        let mut used = vec![false; m.cols];
+        for &c in &m.indices {
+            used[c as usize] = true;
+        }
+        let distinct: u32 = used.iter().filter(|&&u| u).count() as u32;
+        assert_eq!(phases.iter().sum::<u32>(), distinct);
+    }
+
+    #[test]
+    fn makespan_basics() {
+        // One big job dominates.
+        let (mk, mean) = makespan(&[10.0, 1.0, 1.0, 1.0], 4);
+        assert_eq!(mk, 10.0);
+        assert!((mean - 13.0 / 4.0).abs() < 1e-12);
+        // Perfectly divisible.
+        let (mk, _) = makespan(&[1.0; 8], 4);
+        assert!((mk - 2.0).abs() < 1e-12);
+        // Fewer jobs than workers.
+        let (mk, _) = makespan(&[3.0, 5.0], 8);
+        assert_eq!(mk, 5.0);
+        // Empty.
+        assert_eq!(makespan(&[], 4).0, 0.0);
+    }
+
+    #[test]
+    fn makespan_never_below_mean_or_max() {
+        let costs: Vec<f64> = (1..40).map(|i| (i * 7 % 13) as f64 + 0.5).collect();
+        let (mk, mean) = makespan(&costs, 6);
+        let mx = costs.iter().cloned().fold(0.0, f64::max);
+        assert!(mk >= mean - 1e-9);
+        assert!(mk >= mx - 1e-9);
+    }
+
+    #[test]
+    fn degenerate_dims_clamped() {
+        let m = generate(Family::Uniform, 10, 10, 0.2, 5);
+        let g = tile_grid(&m, 10_000, 10_000);
+        assert_eq!(g.n_row_panels, 1);
+        assert_eq!(g.n_col_panels, 1);
+    }
+}

@@ -1,0 +1,316 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched. Artifacts are
+//! described by `artifacts/manifest.json` (shapes/dtypes per entry
+//! point); executables are compiled lazily on first use and cached, so
+//! a process that only fine-tunes pays nothing for the 30+ other entry
+//! points.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Typed host-side tensor passed to / returned from artifacts.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32(vec![x], vec![])
+    }
+    pub fn scalar_i32(x: i32) -> Tensor {
+        Tensor::I32(vec![x], vec![])
+    }
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor::F32(data, shape.to_vec())
+    }
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32(d, _) => d,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Tensor::F32(d, _) => d,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Tensor::F32(d, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                if dims.is_empty() {
+                    xla::Literal::scalar(d[0])
+                } else {
+                    xla::Literal::vec1(d).reshape(&dims)?
+                }
+            }
+            Tensor::I32(d, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                if dims.is_empty() {
+                    xla::Literal::scalar(d[0])
+                } else {
+                    xla::Literal::vec1(d).reshape(&dims)?
+                }
+            }
+        })
+    }
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub dims: HashMap<String, f64>,
+    pub theta_len: HashMap<String, usize>,
+    specs: HashMap<String, ArtifactSpec>,
+    compiled: Mutex<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Serialises EVERY touch of an xla-crate object (client, compiled
+    /// executables, their literals-in-flight). See Send/Sync impls below.
+    xla_lock: Mutex<()>,
+}
+
+// SAFETY: the `xla` crate wraps PJRT objects in `Rc` + raw pointers, so
+// it is neither Send nor Sync by construction. We restore thread safety
+// by *policy*: every code path that touches the client or an executable
+// (compile + execute + result fetch, all inside `exec`) runs while
+// holding `xla_lock`, so no two threads ever operate on (or clone the
+// Rc of) an xla object concurrently. Host-side `Tensor`s are plain
+// Vec<f32>. The PJRT CPU plugin itself is thread-safe for serialized
+// calls from different threads.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load the manifest and start a CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let mut dims = HashMap::new();
+        for (k, v) in manifest.req("dims").as_obj().context("dims")? {
+            dims.insert(k.clone(), v.as_f64().context("dim value")?);
+        }
+        let mut theta_len = HashMap::new();
+        for (k, v) in manifest.req("theta_len").as_obj().context("theta_len")? {
+            theta_len.insert(k.clone(), v.as_usize().context("theta len")?);
+        }
+        let mut specs = HashMap::new();
+        for (name, a) in manifest.req("artifacts").as_obj().context("artifacts")? {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.req(key)
+                    .as_arr()
+                    .context("spec array")?
+                    .iter()
+                    .map(|s| {
+                        Ok(TensorSpec {
+                            name: s
+                                .get("name")
+                                .and_then(|n| n.as_str())
+                                .unwrap_or("")
+                                .to_string(),
+                            shape: s
+                                .req("shape")
+                                .as_arr()
+                                .context("shape")?
+                                .iter()
+                                .map(|d| d.as_usize().context("dim"))
+                                .collect::<Result<_>>()?,
+                            dtype: s.req("dtype").as_str().context("dtype")?.to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            specs.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a.req("file").as_str().context("file")?.to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            dims,
+            theta_len,
+            specs,
+            compiled: Mutex::new(HashMap::new()),
+            xla_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn dim(&self, key: &str) -> usize {
+        *self
+            .dims
+            .get(key)
+            .unwrap_or_else(|| panic!("manifest missing dim {key:?}")) as usize
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.specs.contains_key(name)
+    }
+
+    pub fn spec(&self, name: &str) -> &ArtifactSpec {
+        self.specs
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown artifact {name:?}"))
+    }
+
+    /// Must be called with `xla_lock` held.
+    fn compile_locked(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        crate::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact. Inputs are validated against the manifest.
+    pub fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .specs
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            let (len, shape) = match t {
+                Tensor::F32(d, sh) => (d.len(), sh),
+                Tensor::I32(d, sh) => (d.len(), sh),
+            };
+            if len != s.elems() || shape != &s.shape {
+                bail!(
+                    "{name}: input {:?} shape mismatch: got {shape:?} want {:?}",
+                    s.name,
+                    s.shape
+                );
+            }
+        }
+        let _guard = self.xla_lock.lock().unwrap();
+        let exe = self.compile_locked(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} result"))?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: expected {} outputs, got {}", spec.outputs.len(), parts.len());
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, os)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .with_context(|| format!("{name}: output to f32"))?;
+                Ok(Tensor::F32(data, os.shape.clone()))
+            })
+            .collect()
+    }
+}
+
+/// Default artifacts directory: `$COGNATE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("COGNATE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests that need real artifacts live in rust/tests/;
+    // here we test the manifest plumbing with a synthetic manifest.
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("cognate_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"dims":{"FEAT_B":4},"theta_len":{"cognate":123},
+                "artifacts":{"x_init":{"file":"x.hlo.txt",
+                  "inputs":[{"name":"seed","shape":[],"dtype":"int32"}],
+                  "outputs":[{"shape":[123],"dtype":"float32"}]}}}"#,
+        )
+        .unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.dim("FEAT_B"), 4);
+        assert_eq!(rt.theta_len["cognate"], 123);
+        assert!(rt.has_artifact("x_init"));
+        assert!(!rt.has_artifact("nope"));
+        let spec = rt.spec("x_init");
+        assert_eq!(spec.inputs[0].shape, Vec::<usize>::new());
+        assert_eq!(spec.outputs[0].elems(), 123);
+        // Wrong input count rejected before any compile attempt.
+        assert!(rt.exec("x_init", &[]).is_err());
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::f32(vec![1.0; 6], &[2, 3]);
+        assert_eq!(t.as_f32().len(), 6);
+        let s = Tensor::scalar_f32(5.0);
+        assert_eq!(s.as_f32(), &[5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        let _ = Tensor::f32(vec![1.0; 5], &[2, 3]);
+    }
+}

@@ -1,0 +1,181 @@
+//! Top-k configuration search + evaluation (§4.1 "Cost Model
+//! Evaluation"): predict the cost of every config, take the k best,
+//! execute those on the target (here: look up their simulator cost) and
+//! keep the fastest. Speedups are measured against the platform's
+//! default configuration; the exhaustive optimum comes free from the
+//! dataset's full cost vectors.
+
+pub mod anneal;
+
+use crate::dataset::{Dataset, MatrixRecord};
+use crate::model::ModelDriver;
+use crate::train::{config_features, ZEncoder};
+use crate::util::stats;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct MatrixEval {
+    pub name: String,
+    /// cost(default) / cost(best of top-k).
+    pub speedup: f64,
+    /// cost(default) / cost(optimal).
+    pub optimal_speedup: f64,
+    /// Chosen config's cost (for APE).
+    pub chosen_cost: f64,
+    pub optimal_cost: f64,
+    pub chosen_index: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalSummary {
+    pub geomean_speedup: f64,
+    pub geomean_optimal: f64,
+    pub max_speedup: f64,
+    pub ape: f64,
+    pub per_matrix: Vec<MatrixEval>,
+}
+
+/// Indices of the k highest scores (higher score = predicted faster).
+pub fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx.truncate(k.max(1));
+    idx
+}
+
+/// Evaluate a trained model on `eval_idx` matrices with top-k selection.
+pub fn evaluate(
+    driver: &ModelDriver,
+    zenc: &ZEncoder,
+    ds: &Dataset,
+    eval_idx: &[usize],
+    default_index: usize,
+    k: usize,
+) -> Result<EvalSummary> {
+    let rt = driver.runtime().clone();
+    let (het_dim, latent_dim) = (rt.dim("HET_DIM"), rt.dim("LATENT_DIM"));
+    let feats0 = config_features(ds.platform, ds.records[0].cols);
+    let z_all = zenc.encode(&feats0.het, het_dim, latent_dim)?;
+    let cfg_dim = driver.cfg_dim;
+
+    let mut per_matrix = Vec::with_capacity(eval_idx.len());
+    for &mi in eval_idx {
+        let rec = &ds.records[mi];
+        let scores = score_all(driver, zenc, ds, rec, Some(&z_all))?;
+        per_matrix.push(eval_one(rec, &scores, default_index, k));
+        let _ = cfg_dim;
+    }
+    Ok(summarize(per_matrix))
+}
+
+/// Score every config of one matrix (featurize once, batched scoring).
+pub fn score_all(
+    driver: &ModelDriver,
+    zenc: &ZEncoder,
+    ds: &Dataset,
+    rec: &MatrixRecord,
+    z_cache: Option<&[f32]>,
+) -> Result<Vec<f64>> {
+    let rt = driver.runtime().clone();
+    let (het_dim, latent_dim) = (rt.dim("HET_DIM"), rt.dim("LATENT_DIM"));
+    let feats = config_features(ds.platform, rec.cols);
+    let z_all = match z_cache {
+        Some(z) => z.to_vec(),
+        None => zenc.encode(&feats.het, het_dim, latent_dim)?,
+    };
+    let (cfg, _dim) = feats.cfg_for_variant(&driver.variant);
+    let s = driver.featurize(&[&rec.dmap])?.remove(0);
+    driver.score_configs(&s, cfg, &z_all)
+}
+
+/// Pick the best of the k top-scored configs and compute speedups.
+pub fn eval_one(rec: &MatrixRecord, scores: &[f64], default_index: usize, k: usize) -> MatrixEval {
+    assert_eq!(scores.len(), rec.costs.len());
+    let picks = top_k(scores, k);
+    let (chosen_index, chosen_cost) = picks
+        .iter()
+        .map(|&i| (i, rec.costs[i]))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    let default_cost = rec.costs[default_index];
+    let optimal_cost = rec.optimal_cost();
+    MatrixEval {
+        name: rec.name.clone(),
+        speedup: default_cost / chosen_cost,
+        optimal_speedup: default_cost / optimal_cost,
+        chosen_cost,
+        optimal_cost,
+        chosen_index,
+    }
+}
+
+pub fn summarize(per_matrix: Vec<MatrixEval>) -> EvalSummary {
+    let speedups: Vec<f64> = per_matrix.iter().map(|e| e.speedup).collect();
+    let optimal: Vec<f64> = per_matrix.iter().map(|e| e.optimal_speedup).collect();
+    let chosen: Vec<f64> = per_matrix.iter().map(|e| e.chosen_cost).collect();
+    let opt: Vec<f64> = per_matrix.iter().map(|e| e.optimal_cost).collect();
+    EvalSummary {
+        geomean_speedup: stats::geomean(&speedups),
+        geomean_optimal: stats::geomean(&optimal),
+        max_speedup: stats::max(&speedups),
+        ape: stats::ape(&chosen, &opt),
+        per_matrix,
+    }
+}
+
+/// The oracle selection (exhaustive search over true costs) — an upper
+/// bound any cost model is measured against.
+pub fn oracle_summary(ds: &Dataset, eval_idx: &[usize], default_index: usize) -> EvalSummary {
+    let per: Vec<MatrixEval> = eval_idx
+        .iter()
+        .map(|&mi| {
+            let rec = &ds.records[mi];
+            let best = rec.optimal_index();
+            MatrixEval {
+                name: rec.name.clone(),
+                speedup: rec.costs[default_index] / rec.costs[best],
+                optimal_speedup: rec.costs[default_index] / rec.costs[best],
+                chosen_cost: rec.costs[best],
+                optimal_cost: rec.costs[best],
+                chosen_index: best,
+            }
+        })
+        .collect();
+    summarize(per)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_orders_by_score_desc() {
+        let scores = [0.1, 5.0, -2.0, 3.0];
+        assert_eq!(top_k(&scores, 2), vec![1, 3]);
+        assert_eq!(top_k(&scores, 1), vec![1]);
+        // k larger than n clamps.
+        assert_eq!(top_k(&scores, 10).len(), 4);
+    }
+
+    #[test]
+    fn eval_one_picks_best_of_topk() {
+        let rec = MatrixRecord {
+            name: "t".into(),
+            dmap: vec![],
+            cols: 8,
+            rows: 8,
+            nnz: 4,
+            costs: vec![100.0, 40.0, 60.0, 10.0, 90.0],
+        };
+        // Scores rank configs [4, 2, 1, 0, 3]: top-2 = {4, 2} → best cost 60.
+        let scores = [1.0, 2.0, 4.0, 0.0, 5.0];
+        let e = eval_one(&rec, &scores, 0, 2);
+        assert_eq!(e.chosen_index, 2);
+        assert!((e.speedup - 100.0 / 60.0).abs() < 1e-12);
+        assert!((e.optimal_speedup - 10.0).abs() < 1e-12);
+        // Top-5 reaches the optimum.
+        let e5 = eval_one(&rec, &scores, 0, 5);
+        assert_eq!(e5.chosen_index, 3);
+        assert_eq!(e5.speedup, 10.0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Compressed Sparse Row matrices — the core data structure every layer
+//! of the system consumes: the executable kernels, the platform cost
+//! models, the featurizer, and the generators.
+
+use crate::util::rng::Rng;
+
+/// CSR sparse matrix with `f32` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, length `rows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, sorted within each row, length `nnz`.
+    pub indices: Vec<u32>,
+    /// Values, length `nnz`.
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from COO triplets. Duplicate (r, c) entries are summed,
+    /// column indices are sorted within each row.
+    pub fn from_coo(rows: usize, cols: usize, mut coo: Vec<(u32, u32, f32)>) -> Csr {
+        coo.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(coo.len());
+        let mut values: Vec<f32> = Vec::with_capacity(coo.len());
+        for (r, c, v) in coo {
+            debug_assert!((r as usize) < rows && (c as usize) < cols);
+            if let (Some(&last_c), true) = (indices.last(), indptr[r as usize + 1] > 0) {
+                // same row (because sorted) and same column ⇒ accumulate
+                if last_c == c && indices.len() > indptr[r as usize] {
+                    *values.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            // close out any rows between the previous entry and this one
+            indices.push(c);
+            values.push(v);
+            indptr[r as usize + 1] += 1;
+        }
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        let m = Csr { rows, cols, indptr, indices, values };
+        debug_assert!(m.validate().is_ok(), "{:?}", m.validate());
+        m
+    }
+
+    /// An empty matrix of the given shape.
+    pub fn empty(rows: usize, cols: usize) -> Csr {
+        Csr { rows, cols, indptr: vec![0; rows + 1], indices: vec![], values: vec![] }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Column indices of row `r`.
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        &self.indices[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    pub fn row_values(&self, r: usize) -> &[f32] {
+        &self.values[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    pub fn row_len(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Structural integrity check (sorted unique columns, monotone indptr).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err("indptr length".into());
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.indices.len() {
+            return Err("indptr bounds".into());
+        }
+        if self.indices.len() != self.values.len() {
+            return Err("indices/values length mismatch".into());
+        }
+        // Bounds/monotonicity first — row_indices() slices would panic on
+        // corrupt indptr otherwise.
+        for r in 0..self.rows {
+            if self.indptr[r] > self.indptr[r + 1] || self.indptr[r + 1] > self.indices.len() {
+                return Err(format!("indptr not monotone/in-bounds at row {r}"));
+            }
+        }
+        for r in 0..self.rows {
+            let idx = self.row_indices(r);
+            for w in idx.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} columns not sorted/unique"));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= self.cols {
+                    return Err(format!("row {r} column out of bounds"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Transpose (CSR of Aᵀ) via counting sort — O(nnz + rows + cols).
+    pub fn transpose(&self) -> Csr {
+        let mut indptr = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            indptr[c as usize + 1] += 1;
+        }
+        for c in 0..self.cols {
+            indptr[c + 1] += indptr[c];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        let mut cursor = indptr.clone();
+        for r in 0..self.rows {
+            for (&c, &v) in self.row_indices(r).iter().zip(self.row_values(r)) {
+                let dst = cursor[c as usize];
+                indices[dst] = r as u32;
+                values[dst] = v;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// Apply a row permutation: row `r` of the result is row `perm[r]`
+    /// of `self`. Column structure is untouched.
+    pub fn permute_rows(&self, perm: &[usize]) -> Csr {
+        assert_eq!(perm.len(), self.rows);
+        let mut indptr = vec![0usize; self.rows + 1];
+        for (new_r, &old_r) in perm.iter().enumerate() {
+            indptr[new_r + 1] = indptr[new_r] + self.row_len(old_r);
+        }
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        for &old_r in perm {
+            indices.extend_from_slice(self.row_indices(old_r));
+            values.extend_from_slice(self.row_values(old_r));
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    /// Per-row nnz counts.
+    pub fn row_lengths(&self) -> Vec<usize> {
+        (0..self.rows).map(|r| self.row_len(r)).collect()
+    }
+
+    /// Fill values with uniform randoms in [-1, 1] (structure unchanged);
+    /// used to make numeric kernel tests non-trivial.
+    pub fn randomize_values(&mut self, rng: &mut Rng) {
+        for v in &mut self.values {
+            *v = (rng.next_f64() * 2.0 - 1.0) as f32;
+        }
+    }
+
+    /// Dense row-major representation (tests only; small matrices).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut d = vec![0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for (&c, &v) in self.row_indices(r).iter().zip(self.row_values(r)) {
+                d[r * self.cols + c as usize] = v;
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        Csr::from_coo(3, 3, vec![(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)])
+    }
+
+    #[test]
+    fn from_coo_sorted_and_valid() {
+        let m = Csr::from_coo(3, 3, vec![(2, 1, 4.0), (0, 2, 2.0), (2, 0, 3.0), (0, 0, 1.0)]);
+        assert_eq!(m, sample());
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_indices(2), &[0, 1]);
+        assert_eq!(m.row_len(1), 0);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let m = Csr::from_coo(2, 2, vec![(0, 0, 1.0), (0, 0, 2.5), (1, 1, 1.0)]);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row_values(0), &[3.5]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        t.validate().unwrap();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.row_indices(0), &[0, 2]); // col 0 had rows 0 and 2
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let m = sample();
+        let t = m.transpose();
+        let d = m.to_dense();
+        let dt = t.to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d[r * 3 + c], dt[c * 3 + r]);
+            }
+        }
+    }
+
+    #[test]
+    fn permute_rows_valid() {
+        let m = sample();
+        let p = m.permute_rows(&[2, 0, 1]);
+        p.validate().unwrap();
+        assert_eq!(p.row_indices(0), m.row_indices(2));
+        assert_eq!(p.row_values(1), m.row_values(0));
+        assert_eq!(p.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn density_and_empty() {
+        assert!((sample().density() - 4.0 / 9.0).abs() < 1e-12);
+        let e = Csr::empty(4, 5);
+        e.validate().unwrap();
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.density(), 0.0);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut m = sample();
+        m.indices[0] = 99; // out of bounds
+        assert!(m.validate().is_err());
+        let mut m2 = sample();
+        m2.indptr[1] = 5; // beyond nnz of row 0 region ordering
+        assert!(m2.validate().is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Sparsity-pattern featurization.
+//!
+//! The paper's input featurizer consumes raw (row, col) coordinates with
+//! a submanifold sparse CNN. Our hardware adaptation (DESIGN.md
+//! §Hardware-Adaptation) rasterises the pattern into a fixed
+//! `C × H × W` *density map* consumed by a dense conv pyramid lowered to
+//! Pallas matmuls. Channels:
+//!   0: nnz count per cell, normalised by the max cell count
+//!   1: log1p(count) / log1p(max) — compresses dynamic range
+//!   2: row-profile (fraction of the row's nnz landing in this cell col)
+//!   3: col-profile (fraction of the col's nnz landing in this cell row)
+//! Plus scalar summary features used by host-side baselines and reports.
+
+use super::csr::Csr;
+
+/// Density-map resolution — must match `python/compile/dims.py`
+/// (`DMAP_C/H/W`); checked at runtime against artifacts/manifest.json.
+pub const DMAP_C: usize = 4;
+pub const DMAP_H: usize = 32;
+pub const DMAP_W: usize = 32;
+pub const DMAP_LEN: usize = DMAP_C * DMAP_H * DMAP_W;
+
+/// Rasterise the sparsity pattern into the fixed density map (CHW, f32).
+pub fn density_map(m: &Csr) -> Vec<f32> {
+    let mut counts = vec![0f32; DMAP_H * DMAP_W];
+    let mut row_tot = vec![0f32; DMAP_H];
+    let mut col_tot = vec![0f32; DMAP_W];
+    let rscale = DMAP_H as f64 / m.rows.max(1) as f64;
+    let cscale = DMAP_W as f64 / m.cols.max(1) as f64;
+    for r in 0..m.rows {
+        let br = ((r as f64 * rscale) as usize).min(DMAP_H - 1);
+        for &c in m.row_indices(r) {
+            let bc = ((c as f64 * cscale) as usize).min(DMAP_W - 1);
+            counts[br * DMAP_W + bc] += 1.0;
+            row_tot[br] += 1.0;
+            col_tot[bc] += 1.0;
+        }
+    }
+    let maxc = counts.iter().cloned().fold(0f32, f32::max).max(1.0);
+    let mut out = vec![0f32; DMAP_LEN];
+    let (ch0, rest) = out.split_at_mut(DMAP_H * DMAP_W);
+    let (ch1, rest) = rest.split_at_mut(DMAP_H * DMAP_W);
+    let (ch2, ch3) = rest.split_at_mut(DMAP_H * DMAP_W);
+    for i in 0..DMAP_H * DMAP_W {
+        let c = counts[i];
+        ch0[i] = c / maxc;
+        ch1[i] = (1.0 + c).ln() / (1.0 + maxc).ln();
+        let r = i / DMAP_W;
+        let col = i % DMAP_W;
+        ch2[i] = if row_tot[r] > 0.0 { c / row_tot[r] } else { 0.0 };
+        ch3[i] = if col_tot[col] > 0.0 { c / col_tot[col] } else { 0.0 };
+    }
+    out
+}
+
+/// Scalar summary statistics of a sparsity pattern. Used by the
+/// platform cost models and as cheap host-side features.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MatrixStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub density: f64,
+    pub row_mean: f64,
+    pub row_cv: f64,   // coefficient of variation of row lengths
+    pub row_max: usize,
+    /// Mean |col − row·(cols/rows)| distance from the main diagonal,
+    /// normalised by cols: 0 = perfectly banded, ~0.25 = uniform.
+    pub bandedness: f64,
+    /// Mean per-row column gap (locality of accesses within a row),
+    /// normalised by cols.
+    pub mean_col_gap: f64,
+}
+
+pub fn matrix_stats(m: &Csr) -> MatrixStats {
+    let nnz = m.nnz();
+    let lens = m.row_lengths();
+    let mean = nnz as f64 / m.rows.max(1) as f64;
+    let var = lens
+        .iter()
+        .map(|&l| (l as f64 - mean) * (l as f64 - mean))
+        .sum::<f64>()
+        / m.rows.max(1) as f64;
+    let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+    let ratio = m.cols as f64 / m.rows.max(1) as f64;
+    let mut diag_dist = 0f64;
+    let mut gap_sum = 0f64;
+    let mut gap_n = 0usize;
+    for r in 0..m.rows {
+        let idx = m.row_indices(r);
+        let center = r as f64 * ratio;
+        for &c in idx {
+            diag_dist += (c as f64 - center).abs();
+        }
+        for w in idx.windows(2) {
+            gap_sum += (w[1] - w[0]) as f64;
+            gap_n += 1;
+        }
+    }
+    MatrixStats {
+        rows: m.rows,
+        cols: m.cols,
+        nnz,
+        density: m.density(),
+        row_mean: mean,
+        row_cv: cv,
+        row_max: lens.iter().copied().max().unwrap_or(0),
+        bandedness: if nnz > 0 { diag_dist / nnz as f64 / m.cols.max(1) as f64 } else { 0.0 },
+        mean_col_gap: if gap_n > 0 { gap_sum / gap_n as f64 / m.cols.max(1) as f64 } else { 0.0 },
+    }
+}
+
+/// Number of *distinct* columns touched by a contiguous row block — the
+/// quantity that determines dense-operand reuse for SpMM tiling decisions
+/// in both the CPU cache model and the SPADE buffer model. Cost
+/// O(block nnz) using a stamp array shared across calls.
+pub struct UniqueColCounter {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl UniqueColCounter {
+    pub fn new(cols: usize) -> Self {
+        Self { stamp: vec![0; cols], epoch: 0 }
+    }
+
+    pub fn count(&mut self, m: &Csr, row_start: usize, row_end: usize) -> usize {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.fill(0);
+            self.epoch = 1;
+        }
+        let mut uniq = 0usize;
+        for r in row_start..row_end.min(m.rows) {
+            for &c in m.row_indices(r) {
+                let s = &mut self.stamp[c as usize];
+                if *s != self.epoch {
+                    *s = self.epoch;
+                    uniq += 1;
+                }
+            }
+        }
+        uniq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{generate, Family};
+
+    #[test]
+    fn density_map_shape_and_range() {
+        let m = generate(Family::Uniform, 300, 200, 0.02, 1);
+        let d = density_map(&m);
+        assert_eq!(d.len(), DMAP_LEN);
+        for &v in &d {
+            assert!((0.0..=1.0001).contains(&v), "v={v}");
+        }
+        // channel 0 max is exactly 1 (normalised by max cell)
+        let ch0max = d[..DMAP_H * DMAP_W].iter().cloned().fold(0f32, f32::max);
+        assert!((ch0max - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn density_map_distinguishes_families() {
+        let banded = density_map(&generate(Family::Banded, 512, 512, 0.01, 2));
+        let uniform = density_map(&generate(Family::Uniform, 512, 512, 0.01, 2));
+        let l1: f32 = banded.iter().zip(&uniform).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 > 10.0, "maps too similar: {l1}");
+    }
+
+    #[test]
+    fn empty_matrix_map_is_zero() {
+        let m = Csr::empty(10, 10);
+        assert!(density_map(&m).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn stats_banded_vs_uniform() {
+        let b = matrix_stats(&generate(Family::Banded, 512, 512, 0.01, 3));
+        let u = matrix_stats(&generate(Family::Uniform, 512, 512, 0.01, 3));
+        assert!(b.bandedness < 0.05, "banded bandedness={}", b.bandedness);
+        assert!(u.bandedness > 0.15, "uniform bandedness={}", u.bandedness);
+        assert!(b.mean_col_gap < u.mean_col_gap);
+    }
+
+    #[test]
+    fn stats_powerlaw_high_cv() {
+        let p = matrix_stats(&generate(Family::PowerLaw, 512, 512, 0.02, 4));
+        let u = matrix_stats(&generate(Family::Uniform, 512, 512, 0.02, 4));
+        assert!(p.row_cv > 2.0 * u.row_cv, "p.cv={} u.cv={}", p.row_cv, u.row_cv);
+    }
+
+    #[test]
+    fn unique_cols_counter() {
+        let m = Csr::from_coo(
+            4,
+            8,
+            vec![(0, 1, 1.0), (0, 3, 1.0), (1, 1, 1.0), (1, 5, 1.0), (2, 1, 1.0), (3, 7, 1.0)],
+        );
+        let mut ctr = UniqueColCounter::new(8);
+        assert_eq!(ctr.count(&m, 0, 2), 3); // {1,3,5}
+        assert_eq!(ctr.count(&m, 0, 4), 4); // {1,3,5,7}
+        assert_eq!(ctr.count(&m, 2, 3), 1);
+        assert_eq!(ctr.count(&m, 4, 9), 0); // clamped past end
+    }
+}

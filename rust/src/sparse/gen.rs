@@ -1,0 +1,340 @@
+//! Synthetic sparse-matrix collection — the SuiteSparse stand-in.
+//!
+//! The paper evaluates on 1,500 SuiteSparse matrices spanning many
+//! domains. Offline we generate a seeded collection of matrices from six
+//! structural families chosen to span the axes that make sparse-kernel
+//! optima input-dependent: density, row-degree skew, bandedness /
+//! locality, block structure, and aspect ratio. A `CollectionSpec`
+//! reproduces the paper's five size bins (§4.1) at a configurable scale.
+
+use super::csr::Csr;
+use crate::util::rng::Rng;
+
+/// Structural families. Each mimics a real SuiteSparse domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Uniform Erdős–Rényi sparsity (e.g. random circuit matrices).
+    Uniform,
+    /// Power-law row degrees (social / web graphs).
+    PowerLaw,
+    /// RMAT/Kronecker-style self-similar graphs (graph analytics).
+    Rmat,
+    /// Banded diagonals (1-D PDE / time-series).
+    Banded,
+    /// Dense blocks on a sparse skeleton (multiphysics, FEM supernodes).
+    Block,
+    /// 5-point 2-D mesh stencil (structured PDE grids).
+    Mesh2d,
+}
+
+pub const ALL_FAMILIES: [Family; 6] = [
+    Family::Uniform,
+    Family::PowerLaw,
+    Family::Rmat,
+    Family::Banded,
+    Family::Block,
+    Family::Mesh2d,
+];
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Uniform => "uniform",
+            Family::PowerLaw => "powerlaw",
+            Family::Rmat => "rmat",
+            Family::Banded => "banded",
+            Family::Block => "block",
+            Family::Mesh2d => "mesh2d",
+        }
+    }
+}
+
+/// A named matrix in the collection, with its generator provenance.
+#[derive(Clone, Debug)]
+pub struct MatrixInfo {
+    pub name: String,
+    pub family: Family,
+    pub seed: u64,
+    pub matrix: Csr,
+}
+
+/// Generate one matrix of the requested family / size / target density.
+pub fn generate(family: Family, rows: usize, cols: usize, density: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed ^ 0xC0C0_A7E5_EED5_EEDD);
+    let target_nnz = ((rows as f64 * cols as f64 * density).round() as usize).max(rows.min(cols));
+    let mut m = match family {
+        Family::Uniform => gen_uniform(rows, cols, target_nnz, &mut rng),
+        Family::PowerLaw => gen_powerlaw(rows, cols, target_nnz, &mut rng),
+        Family::Rmat => gen_rmat(rows, cols, target_nnz, &mut rng),
+        Family::Banded => gen_banded(rows, cols, target_nnz, &mut rng),
+        Family::Block => gen_block(rows, cols, target_nnz, &mut rng),
+        Family::Mesh2d => gen_mesh2d(rows, cols, &mut rng),
+    };
+    m.randomize_values(&mut rng);
+    m
+}
+
+fn gen_uniform(rows: usize, cols: usize, nnz: usize, rng: &mut Rng) -> Csr {
+    let mut coo = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        coo.push((rng.next_usize(rows) as u32, rng.next_usize(cols) as u32, 1.0));
+    }
+    Csr::from_coo(rows, cols, coo)
+}
+
+fn gen_powerlaw(rows: usize, cols: usize, nnz: usize, rng: &mut Rng) -> Csr {
+    // Draw per-row degrees from a truncated Pareto, scale to hit nnz, then
+    // scatter columns with mild locality (preferential low columns).
+    let alpha = rng.range_f64(1.8, 2.6);
+    let mut deg: Vec<f64> = (0..rows).map(|_| rng.next_powerlaw(alpha, cols as f64)).collect();
+    let total: f64 = deg.iter().sum();
+    let scale = nnz as f64 / total;
+    let mut coo = Vec::with_capacity(nnz + rows);
+    for (r, d) in deg.iter_mut().enumerate() {
+        let k = ((*d * scale).round() as usize).clamp(1, cols);
+        for _ in 0..k {
+            // Zipf-ish column choice: square a uniform to bias low ids.
+            let u = rng.next_f64();
+            let c = ((u * u) * cols as f64) as usize % cols;
+            coo.push((r as u32, c as u32, 1.0));
+        }
+    }
+    Csr::from_coo(rows, cols, coo)
+}
+
+fn gen_rmat(rows: usize, cols: usize, nnz: usize, rng: &mut Rng) -> Csr {
+    // Classic R-MAT recursion with (a, b, c, d) ≈ (0.57, 0.19, 0.19, 0.05).
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let rbits = (rows as f64).log2().ceil() as u32;
+    let cbits = (cols as f64).log2().ceil() as u32;
+    let mut coo = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let (mut r, mut ccol) = (0usize, 0usize);
+        for bit in 0..rbits.max(cbits) {
+            let u = rng.next_f64();
+            let (dr, dc) = if u < a {
+                (0, 0)
+            } else if u < a + b {
+                (0, 1)
+            } else if u < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            if bit < rbits {
+                r = (r << 1) | dr;
+            }
+            if bit < cbits {
+                ccol = (ccol << 1) | dc;
+            }
+        }
+        coo.push(((r % rows) as u32, (ccol % cols) as u32, 1.0));
+    }
+    Csr::from_coo(rows, cols, coo)
+}
+
+fn gen_banded(rows: usize, cols: usize, nnz: usize, rng: &mut Rng) -> Csr {
+    // Diagonal band with width sized from the nnz budget, plus light noise.
+    let per_row = (nnz / rows.max(1)).max(1);
+    let band = per_row.max(2);
+    let mut coo = Vec::with_capacity(nnz + rows);
+    let ratio = cols as f64 / rows.max(1) as f64;
+    for r in 0..rows {
+        let center = (r as f64 * ratio) as i64;
+        for k in 0..per_row {
+            let off = k as i64 - (band as i64) / 2 + (rng.next_usize(3) as i64 - 1);
+            let c = (center + off).clamp(0, cols as i64 - 1);
+            coo.push((r as u32, c as u32, 1.0));
+        }
+    }
+    Csr::from_coo(rows, cols, coo)
+}
+
+fn gen_block(rows: usize, cols: usize, nnz: usize, rng: &mut Rng) -> Csr {
+    // Random dense blocks until the budget is used.
+    let bs = *rng.choose(&[4usize, 8, 16]);
+    let mut coo = Vec::with_capacity(nnz + bs * bs);
+    let mut placed = 0usize;
+    while placed < nnz {
+        let r0 = rng.next_usize(rows.saturating_sub(bs).max(1));
+        let c0 = rng.next_usize(cols.saturating_sub(bs).max(1));
+        let fill = rng.range_f64(0.6, 1.0);
+        for dr in 0..bs.min(rows - r0) {
+            for dc in 0..bs.min(cols - c0) {
+                if rng.next_f64() < fill {
+                    coo.push(((r0 + dr) as u32, (c0 + dc) as u32, 1.0));
+                    placed += 1;
+                }
+            }
+        }
+    }
+    Csr::from_coo(rows, cols, coo)
+}
+
+fn gen_mesh2d(rows: usize, cols: usize, rng: &mut Rng) -> Csr {
+    // 5-point stencil over an s×s grid, s = floor(sqrt(min(rows, cols))),
+    // embedded in a rows×cols matrix (square region), with a few random
+    // long-range couplings to break perfect structure.
+    let n = rows.min(cols);
+    let s = (n as f64).sqrt() as usize;
+    let n = s * s;
+    let mut coo = Vec::with_capacity(5 * n);
+    for y in 0..s {
+        for x in 0..s {
+            let i = (y * s + x) as u32;
+            coo.push((i, i, 4.0));
+            if x > 0 {
+                coo.push((i, i - 1, -1.0));
+            }
+            if x + 1 < s {
+                coo.push((i, i + 1, -1.0));
+            }
+            if y > 0 {
+                coo.push((i, i - s as u32, -1.0));
+            }
+            if y + 1 < s {
+                coo.push((i, i + s as u32, -1.0));
+            }
+        }
+    }
+    for _ in 0..n / 50 {
+        coo.push((rng.next_usize(n) as u32, rng.next_usize(n) as u32, 0.5));
+    }
+    Csr::from_coo(rows, cols, coo)
+}
+
+/// Collection specification mirroring the paper's setup: five size bins
+/// (§4.1: <8192 … >131072 total "input size" ≈ rows) sampled across all
+/// families with varied densities.
+#[derive(Clone, Debug)]
+pub struct CollectionSpec {
+    pub seed: u64,
+    /// Matrices per (bin, family) cell.
+    pub per_cell: usize,
+    /// Upper bound on rows/cols, to scale the collection to the machine.
+    pub max_dim: usize,
+}
+
+impl Default for CollectionSpec {
+    fn default() -> Self {
+        // ~6 families × 5 bins × 6 = 180 matrices, dims ≤ 4096: tractable
+        // for full-pipeline runs on one machine. `--scale` raises this.
+        Self { seed: 0xC0C0_A7E0, per_cell: 6, max_dim: 4096 }
+    }
+}
+
+/// Paper's five size bins (by row count), clamped to `max_dim`.
+pub fn size_bins(max_dim: usize) -> Vec<(usize, usize)> {
+    let bins = [(256, 1024), (1024, 2048), (2048, 4096), (4096, 8192), (8192, 16384)];
+    bins.iter()
+        .map(|&(lo, hi)| (lo.min(max_dim), hi.min(max_dim)))
+        .collect()
+}
+
+/// Generate the full named collection. Deterministic in `spec.seed`.
+pub fn generate_collection(spec: &CollectionSpec) -> Vec<MatrixInfo> {
+    let mut rng = Rng::new(spec.seed);
+    let mut out = Vec::new();
+    for (bin_idx, &(lo, hi)) in size_bins(spec.max_dim).iter().enumerate() {
+        for &family in &ALL_FAMILIES {
+            for k in 0..spec.per_cell {
+                let mut r = rng.fork((bin_idx * 1000 + k) as u64 ^ family as u64);
+                let rows = lo + r.next_usize((hi - lo).max(1));
+                // Mix square and rectangular shapes.
+                let cols = match r.next_usize(3) {
+                    0 => rows,
+                    1 => (rows / 2).max(64),
+                    _ => (rows * 2).min(spec.max_dim.max(128)),
+                };
+                let density = 10f64.powf(r.range_f64(-3.2, -1.3));
+                let seed = r.next_u64();
+                let matrix = generate(family, rows, cols, density, seed);
+                out.push(MatrixInfo {
+                    name: format!("{}_{bin_idx}_{k}_{rows}x{cols}", family.name()),
+                    family,
+                    seed,
+                    matrix,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_families_generate_valid_matrices() {
+        for &f in &ALL_FAMILIES {
+            let m = generate(f, 200, 160, 0.02, 7);
+            m.validate().unwrap_or_else(|e| panic!("{f:?}: {e}"));
+            assert!(m.nnz() > 0, "{f:?} empty");
+            assert_eq!(m.rows, 200);
+            assert_eq!(m.cols, 160);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = generate(Family::Rmat, 128, 128, 0.05, 42);
+        let b = generate(Family::Rmat, 128, 128, 0.05, 42);
+        let c = generate(Family::Rmat, 128, 128, 0.05, 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn powerlaw_rows_are_skewed() {
+        let m = generate(Family::PowerLaw, 512, 512, 0.02, 1);
+        let lens = m.row_lengths();
+        let max = *lens.iter().max().unwrap() as f64;
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!(max > 4.0 * mean, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn banded_is_local() {
+        let m = generate(Family::Banded, 256, 256, 0.02, 3);
+        // Every nnz within a small distance of the diagonal.
+        for r in 0..m.rows {
+            for &c in m.row_indices(r) {
+                assert!((c as i64 - r as i64).unsigned_abs() < 32, "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_is_symmetric_structure() {
+        let m = generate(Family::Mesh2d, 400, 400, 0.01, 5);
+        assert!(m.nnz() >= 5 * 19 * 19); // s=20 grid minus borders
+    }
+
+    #[test]
+    fn collection_covers_bins_and_families() {
+        let spec = CollectionSpec { seed: 1, per_cell: 1, max_dim: 1024 };
+        let coll = generate_collection(&spec);
+        assert_eq!(coll.len(), 5 * ALL_FAMILIES.len());
+        for info in &coll {
+            info.matrix.validate().unwrap();
+            assert!(info.matrix.rows <= 1024);
+        }
+        // Names unique.
+        let mut names: Vec<&str> = coll.iter().map(|i| i.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), coll.len());
+    }
+
+    #[test]
+    fn collection_deterministic() {
+        let spec = CollectionSpec { seed: 9, per_cell: 1, max_dim: 512 };
+        let a = generate_collection(&spec);
+        let b = generate_collection(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.matrix, y.matrix);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! MatrixMarket (`.mtx`) I/O — lets real SuiteSparse matrices be dropped
+//! into the pipeline in place of the synthetic collection when available.
+//! Supports `matrix coordinate {real,integer,pattern} {general,symmetric}`.
+
+use super::csr::Csr;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+pub fn read_mtx(path: &Path) -> Result<Csr> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    parse_mtx(BufReader::new(file))
+}
+
+pub fn parse_mtx<R: BufRead>(reader: R) -> Result<Csr> {
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .context("empty file")?
+        .context("read header")?;
+    let h: Vec<String> = header.split_whitespace().map(|s| s.to_lowercase()).collect();
+    if h.len() < 4 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
+        bail!("not a MatrixMarket header: {header:?}");
+    }
+    if h[2] != "coordinate" {
+        bail!("only coordinate format supported, got {:?}", h[2]);
+    }
+    let field = h[3].as_str();
+    if !matches!(field, "real" | "integer" | "pattern") {
+        bail!("unsupported field {field:?}");
+    }
+    let symmetry = h.get(4).map(String::as_str).unwrap_or("general").to_string();
+    if !matches!(symmetry.as_str(), "general" | "symmetric") {
+        bail!("unsupported symmetry {symmetry:?}");
+    }
+
+    // Skip comments; first non-comment line is the size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line.context("read line")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(line);
+        break;
+    }
+    let size_line = size_line.context("missing size line")?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("bad size line {size_line:?}"))?;
+    if dims.len() != 3 {
+        bail!("size line needs 3 fields");
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo: Vec<(u32, u32, f32)> = Vec::with_capacity(nnz);
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line.context("read entry")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("row")?.parse().context("row parse")?;
+        let c: usize = it.next().context("col")?.parse().context("col parse")?;
+        let v: f32 = if field == "pattern" {
+            1.0
+        } else {
+            it.next().context("value")?.parse().context("value parse")?
+        };
+        if r == 0 || c == 0 || r > rows || c > cols {
+            bail!("entry out of bounds: {r} {c}");
+        }
+        coo.push((r as u32 - 1, c as u32 - 1, v));
+        if symmetry == "symmetric" && r != c {
+            coo.push((c as u32 - 1, r as u32 - 1, v));
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("declared nnz {nnz} but found {seen}");
+    }
+    Ok(Csr::from_coo(rows, cols, coo))
+}
+
+pub fn write_mtx(path: &Path, m: &Csr) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by cognate-repro")?;
+    writeln!(f, "{} {} {}", m.rows, m.cols, m.nnz())?;
+    for r in 0..m.rows {
+        for (&c, &v) in m.row_indices(r).iter().zip(m.row_values(r)) {
+            writeln!(f, "{} {} {}", r + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general_real() {
+        let src = "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 2\n1 1 1.5\n3 2 -2\n";
+        let m = parse_mtx(Cursor::new(src)).unwrap();
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row_values(0), &[1.5]);
+        assert_eq!(m.row_indices(2), &[1]);
+    }
+
+    #[test]
+    fn parse_symmetric_pattern() {
+        let src = "%%MatrixMarket matrix coordinate pattern symmetric\n3 3 2\n2 1\n3 3\n";
+        let m = parse_mtx(Cursor::new(src)).unwrap();
+        // (2,1) mirrored to (1,2); diagonal (3,3) not duplicated.
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_indices(0), &[1]);
+        assert_eq!(m.row_indices(1), &[0]);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse_mtx(Cursor::new("garbage")).is_err());
+        assert!(parse_mtx(Cursor::new("%%MatrixMarket matrix array real general\n2 2\n")).is_err());
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(parse_mtx(Cursor::new(oob)).is_err());
+        let wrong_nnz = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(parse_mtx(Cursor::new(wrong_nnz)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let m = crate::sparse::gen::generate(crate::sparse::gen::Family::Rmat, 64, 48, 0.05, 7);
+        let dir = std::env::temp_dir().join("cognate_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.mtx");
+        write_mtx(&path, &m).unwrap();
+        let back = read_mtx(&path).unwrap();
+        assert_eq!(back.rows, m.rows);
+        assert_eq!(back.cols, m.cols);
+        assert_eq!(back.nnz(), m.nnz());
+        assert_eq!(back.indices, m.indices);
+        for (a, b) in back.values.iter().zip(&m.values) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

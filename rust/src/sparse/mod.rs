@@ -1,0 +1,13 @@
+//! Sparse-matrix substrate: CSR storage, the synthetic SuiteSparse-like
+//! collection generator, featurization (density maps + summary stats),
+//! row reordering strategies, and MatrixMarket I/O.
+
+pub mod csr;
+pub mod features;
+pub mod formats;
+pub mod gen;
+pub mod mm;
+pub mod reorder;
+
+pub use csr::Csr;
+pub use gen::{generate, generate_collection, CollectionSpec, Family, MatrixInfo};

@@ -1,0 +1,183 @@
+//! Matrix (row) reordering strategies — SPADE's `matrix reordering`
+//! knob and TACO's `format reordering` both resolve to one of these.
+
+use super::csr::Csr;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Reorder {
+    /// Identity (no reordering).
+    None,
+    /// Rows sorted by descending nnz — load balance for skewed matrices.
+    DegreeDesc,
+    /// Reverse Cuthill–McKee-style BFS ordering — bandwidth reduction.
+    Rcm,
+    /// Pseudo-random shuffle (a *bad* strategy, kept so learned models
+    /// must discover it is bad — mirrors TACO's format-order freedom).
+    Scatter,
+}
+
+pub const ALL_REORDERS: [Reorder; 4] =
+    [Reorder::None, Reorder::DegreeDesc, Reorder::Rcm, Reorder::Scatter];
+
+impl Reorder {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Reorder::None => "none",
+            Reorder::DegreeDesc => "degree",
+            Reorder::Rcm => "rcm",
+            Reorder::Scatter => "scatter",
+        }
+    }
+    pub fn index(&self) -> usize {
+        match self {
+            Reorder::None => 0,
+            Reorder::DegreeDesc => 1,
+            Reorder::Rcm => 2,
+            Reorder::Scatter => 3,
+        }
+    }
+}
+
+/// Compute the row permutation for a strategy. `perm[new_row] = old_row`.
+pub fn permutation(m: &Csr, strategy: Reorder) -> Vec<usize> {
+    match strategy {
+        Reorder::None => (0..m.rows).collect(),
+        Reorder::DegreeDesc => {
+            let mut idx: Vec<usize> = (0..m.rows).collect();
+            // Stable sort keeps determinism for equal degrees.
+            idx.sort_by_key(|&r| std::cmp::Reverse(m.row_len(r)));
+            idx
+        }
+        Reorder::Rcm => rcm(m),
+        Reorder::Scatter => {
+            // Deterministic bit-mix shuffle (golden-ratio multiplicative
+            // hash), independent of any RNG state.
+            let mut idx: Vec<usize> = (0..m.rows).collect();
+            idx.sort_by_key(|&r| (r as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            idx
+        }
+    }
+}
+
+/// Apply a strategy, returning the permuted matrix.
+pub fn apply(m: &Csr, strategy: Reorder) -> Csr {
+    match strategy {
+        Reorder::None => m.clone(),
+        _ => m.permute_rows(&permutation(m, strategy)),
+    }
+}
+
+/// RCM-style ordering on the row-connectivity graph: rows are adjacent
+/// if they share a column. Building that graph exactly is O(nnz²/cols)
+/// in bad cases, so we use the standard trick of BFS over the bipartite
+/// row→col→row relation, visiting neighbours in ascending-degree order,
+/// then reversing. Works on rectangular matrices.
+fn rcm(m: &Csr) -> Vec<usize> {
+    let t = m.transpose();
+    let mut visited = vec![false; m.rows];
+    let mut order = Vec::with_capacity(m.rows);
+    let mut degs: Vec<usize> = (0..m.rows).map(|r| m.row_len(r)).collect();
+    // Process components from lowest-degree unvisited seed.
+    let mut seeds: Vec<usize> = (0..m.rows).collect();
+    seeds.sort_by_key(|&r| degs[r]);
+    let mut queue = std::collections::VecDeque::new();
+    for &seed in &seeds {
+        if visited[seed] {
+            continue;
+        }
+        visited[seed] = true;
+        queue.push_back(seed);
+        while let Some(r) = queue.pop_front() {
+            order.push(r);
+            // Neighbour rows via shared columns.
+            let mut nbrs: Vec<usize> = Vec::new();
+            for &c in m.row_indices(r) {
+                for &r2 in t.row_indices(c as usize) {
+                    let r2 = r2 as usize;
+                    if !visited[r2] {
+                        visited[r2] = true;
+                        nbrs.push(r2);
+                    }
+                }
+            }
+            nbrs.sort_by_key(|&x| degs[x]);
+            for n in nbrs {
+                queue.push_back(n);
+            }
+        }
+    }
+    degs.clear();
+    order.reverse();
+    order
+}
+
+/// Matrix bandwidth: max |c - r| over nnz (square interpretation).
+pub fn bandwidth(m: &Csr) -> usize {
+    let mut bw = 0usize;
+    for r in 0..m.rows {
+        for &c in m.row_indices(r) {
+            bw = bw.max((c as i64 - r as i64).unsigned_abs() as usize);
+        }
+    }
+    bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{generate, Family};
+
+    #[test]
+    fn permutations_are_valid() {
+        let m = generate(Family::PowerLaw, 200, 200, 0.03, 1);
+        for &s in &ALL_REORDERS {
+            let p = permutation(&m, s);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..m.rows).collect::<Vec<_>>(), "{s:?}");
+            apply(&m, s).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn degree_sorts_descending() {
+        let m = generate(Family::PowerLaw, 300, 300, 0.02, 2);
+        let p = apply(&m, Reorder::DegreeDesc);
+        let lens = p.row_lengths();
+        for w in lens.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn rcm_improves_row_block_locality_of_shuffled_mesh() {
+        // Row-only reordering cannot change column labels (so classic
+        // bandwidth is out of its reach) — what it CAN do, and what the
+        // tiling models reward, is make *consecutive rows share columns*:
+        // the distinct-column working set per row block shrinks.
+        let m = generate(Family::Mesh2d, 400, 400, 0.01, 3);
+        let block_ucols_sum = |m: &Csr| -> usize {
+            let mut ctr = crate::sparse::features::UniqueColCounter::new(m.cols);
+            (0..m.rows)
+                .step_by(32)
+                .map(|r0| ctr.count(m, r0, r0 + 32))
+                .sum()
+        };
+        let shuffled = apply(&m, Reorder::Scatter);
+        let restored = apply(&shuffled, Reorder::Rcm);
+        let u_shuffled = block_ucols_sum(&shuffled);
+        let u_rcm = block_ucols_sum(&restored);
+        assert!(
+            u_rcm < u_shuffled,
+            "rcm should shrink block working sets: {u_rcm} !< {u_shuffled}"
+        );
+    }
+
+    #[test]
+    fn nnz_preserved() {
+        let m = generate(Family::Rmat, 128, 256, 0.02, 4);
+        for &s in &ALL_REORDERS {
+            assert_eq!(apply(&m, s).nnz(), m.nnz(), "{s:?}");
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Training and few-shot fine-tuning of the learned cost models
+//! (pre-train on CPU → fine-tune on SPADE/GPU, §4.1).
+//!
+//! The actual gradient step runs inside the AOT `*_train` artifact
+//! (loss + grad + Adam fused in one HLO); this module owns everything
+//! around it: pair sampling, config-feature encoding, z-encoding of the
+//! heterogeneous component, epoch loops and validation metrics
+//! (PRL / OPA / Kendall-τ — Fig 6).
+
+use crate::config::{self, Config, PlatformId};
+use crate::dataset::Dataset;
+use crate::model::pca::Pca;
+use crate::model::{AeDriver, ModelDriver, TrainBatch};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use anyhow::Result;
+
+/// Per-config feature tensors for one platform (row-major).
+pub struct ConfigFeatures {
+    pub n: usize,
+    pub mapped: Vec<f32>, // [n, MAPPED_DIM]
+    pub het: Vec<f32>,    // [n, HET_DIM]
+    pub fa: Vec<f32>,     // [n, FA_DIM]
+}
+
+/// Encode every config of a platform. `cols` resolves SPADE's
+/// NUM_MATRIX_COLS tiling option, so this is per-matrix for SPADE.
+pub fn config_features(platform: PlatformId, cols: usize) -> ConfigFeatures {
+    let configs: Vec<Config> = match platform {
+        PlatformId::Cpu => config::cpu_space().into_iter().map(Config::Cpu).collect(),
+        PlatformId::Spade => config::spade_space().into_iter().map(Config::Spade).collect(),
+        PlatformId::Gpu => config::gpu_space().into_iter().map(Config::Gpu).collect(),
+    };
+    let n = configs.len();
+    let mut mapped = Vec::with_capacity(n * config::MAPPED_DIM);
+    let mut het = Vec::with_capacity(n * config::HET_DIM);
+    let mut fa = Vec::with_capacity(n * config::FA_DIM);
+    for c in &configs {
+        mapped.extend(config::mapped_vector(c, cols));
+        het.extend(config::het_vector(c));
+        fa.extend(config::fa_vector(c, cols));
+    }
+    ConfigFeatures { n, mapped, het, fa }
+}
+
+impl ConfigFeatures {
+    /// The config vector a model variant consumes.
+    pub fn cfg_for_variant<'a>(&'a self, variant: &str) -> (&'a [f32], usize) {
+        if variant == "waco_fa" {
+            (&self.fa, config::FA_DIM)
+        } else {
+            (&self.mapped, config::MAPPED_DIM)
+        }
+    }
+}
+
+/// How the heterogeneous component becomes the latent z (Fig 9).
+pub enum ZEncoder {
+    /// Trained autoencoder / VAE (the paper's choice).
+    Ae(AeDriver),
+    /// PCA projection (baseline).
+    Pca(Pca),
+    /// Raw het vector zero-padded to LATENT_DIM (feature augmentation).
+    RawHet,
+    /// All-zero latent (used by variants that ignore z).
+    Zero,
+}
+
+impl ZEncoder {
+    /// Encode [n, HET_DIM] het rows into [n, latent_dim] z rows.
+    pub fn encode(&self, het: &[f32], het_dim: usize, latent_dim: usize) -> Result<Vec<f32>> {
+        let n = het.len() / het_dim;
+        Ok(match self {
+            ZEncoder::Ae(ae) => ae.encode(het)?,
+            ZEncoder::Pca(p) => p.encode(het, latent_dim),
+            ZEncoder::RawHet => {
+                let mut z = vec![0f32; n * latent_dim];
+                for r in 0..n {
+                    z[r * latent_dim..r * latent_dim + het_dim.min(latent_dim)]
+                        .copy_from_slice(&het[r * het_dim..r * het_dim + het_dim.min(latent_dim)]);
+                }
+                z
+            }
+            ZEncoder::Zero => vec![0f32; n * latent_dim],
+        })
+    }
+}
+
+/// Train an autoencoder on a platform's het vectors (unsupervised,
+/// §3.3: one AE per target platform / primitive pair).
+pub fn train_autoencoder(
+    ae: &mut AeDriver,
+    het: &[f32],
+    het_dim: usize,
+    latent_dim: usize,
+    steps: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<Vec<f32>> {
+    let n = het.len() / het_dim;
+    let mut rng = Rng::new(seed);
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let mut x = vec![0f32; batch * het_dim];
+        let mut eps = vec![0f32; batch * latent_dim];
+        for r in 0..batch {
+            let src = rng.next_usize(n);
+            x[r * het_dim..(r + 1) * het_dim]
+                .copy_from_slice(&het[src * het_dim..(src + 1) * het_dim]);
+        }
+        for e in eps.iter_mut() {
+            *e = rng.next_gaussian() as f32;
+        }
+        losses.push(ae.train_step(&x, &eps)?);
+    }
+    Ok(losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FA_DIM, HET_DIM, MAPPED_DIM};
+
+    #[test]
+    fn config_features_sizes_per_platform() {
+        for (p, n) in [
+            (PlatformId::Cpu, 1024usize),
+            (PlatformId::Spade, 256),
+            (PlatformId::Gpu, 288),
+        ] {
+            let f = config_features(p, 4096);
+            assert_eq!(f.n, n);
+            assert_eq!(f.mapped.len(), n * MAPPED_DIM);
+            assert_eq!(f.het.len(), n * HET_DIM);
+            assert_eq!(f.fa.len(), n * FA_DIM);
+        }
+    }
+
+    #[test]
+    fn cfg_for_variant_selects_encoding() {
+        let f = config_features(PlatformId::Spade, 1000);
+        assert_eq!(f.cfg_for_variant("waco_fa").1, FA_DIM);
+        assert_eq!(f.cfg_for_variant("waco_fm").1, MAPPED_DIM);
+        assert_eq!(f.cfg_for_variant("cognate").1, MAPPED_DIM);
+    }
+
+    #[test]
+    fn spade_mapped_features_depend_on_matrix_cols() {
+        // NUM_MATRIX_COLS configs resolve differently per matrix width.
+        let a = config_features(PlatformId::Spade, 1024);
+        let b = config_features(PlatformId::Spade, 100_000);
+        assert_ne!(a.mapped, b.mapped);
+        assert_eq!(a.het, b.het, "het is matrix-independent");
+    }
+
+    #[test]
+    fn zencoder_rawhet_pads_and_zero_zeroes() {
+        let het = vec![1.0f32; 2 * 16];
+        let raw = ZEncoder::RawHet.encode(&het, 16, 64).unwrap();
+        assert_eq!(raw.len(), 2 * 64);
+        assert_eq!(&raw[..16], &het[..16]);
+        assert!(raw[16..64].iter().all(|&x| x == 0.0));
+        let zero = ZEncoder::Zero.encode(&het, 16, 64).unwrap();
+        assert!(zero.iter().all(|&x| x == 0.0));
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub epochs: usize,
+    pub batches_per_epoch: usize,
+    /// Configs sampled per matrix (the paper samples 100).
+    pub configs_per_matrix: usize,
+    pub seed: u64,
+    /// Matrices used for per-epoch validation metrics (0 = skip).
+    pub val_matrices: usize,
+    /// Configs scored per validation matrix.
+    pub val_configs: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        Self {
+            epochs: 12,
+            batches_per_epoch: 48,
+            configs_per_matrix: 100,
+            seed: 42,
+            val_matrices: 8,
+            val_configs: 48,
+            log_every: 4,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub val_prl: f64,
+    pub val_opa: f64,
+    pub val_ktau: f64,
+}
+
+/// Pre-train or fine-tune `driver` on `ds` restricted to `train_idx`.
+/// The same routine serves both phases — fine-tuning is just a short
+/// run on few matrices starting from pre-trained θ (§4.1).
+pub fn train(
+    driver: &mut ModelDriver,
+    zenc: &ZEncoder,
+    ds: &Dataset,
+    train_idx: &[usize],
+    val_idx: &[usize],
+    opts: &TrainOpts,
+) -> Result<Vec<EpochLog>> {
+    assert!(!train_idx.is_empty(), "no training matrices");
+    let rt = driver.runtime().clone();
+    let (het_dim, latent_dim) = (rt.dim("HET_DIM"), rt.dim("LATENT_DIM"));
+    let b = driver.train_b();
+    let dmap_len = driver.dmap_len();
+    let mut rng = Rng::new(opts.seed);
+    let sampled = ds.sample_configs(opts.configs_per_matrix, opts.seed ^ 0x5EED);
+
+    // Per-matrix cfg/z caches (SPADE's mapped vectors depend on cols).
+    // het (→ z) is matrix-independent, so encode once.
+    let feats0 = config_features(ds.platform, ds.records[0].cols);
+    let z_all = zenc.encode(&feats0.het, het_dim, latent_dim)?;
+    let cfg_dim = driver.cfg_dim;
+    let per_matrix_cfg: Vec<Vec<f32>> = ds
+        .records
+        .iter()
+        .map(|r| {
+            let f = config_features(ds.platform, r.cols);
+            f.cfg_for_variant(&driver.variant).0.to_vec()
+        })
+        .collect();
+
+    let mut logs = Vec::with_capacity(opts.epochs);
+    for epoch in 0..opts.epochs {
+        let mut loss_sum = 0f64;
+        for _ in 0..opts.batches_per_epoch {
+            let mut batch = TrainBatch {
+                dmap: vec![0f32; b * dmap_len],
+                cfg_a: vec![0f32; b * cfg_dim],
+                z_a: vec![0f32; b * latent_dim],
+                cfg_b: vec![0f32; b * cfg_dim],
+                z_b: vec![0f32; b * latent_dim],
+                sign: vec![0f32; b],
+                weight: vec![0f32; b],
+            };
+            for row in 0..b {
+                let mi = train_idx[rng.next_usize(train_idx.len())];
+                let rec = &ds.records[mi];
+                let pool = &sampled[mi];
+                let ca = pool[rng.next_usize(pool.len())] as usize;
+                let mut cb = pool[rng.next_usize(pool.len())] as usize;
+                let mut guard = 0;
+                while rec.costs[cb] == rec.costs[ca] && guard < 8 {
+                    cb = pool[rng.next_usize(pool.len())] as usize;
+                    guard += 1;
+                }
+                batch.dmap[row * dmap_len..(row + 1) * dmap_len].copy_from_slice(&rec.dmap);
+                let cfgs = &per_matrix_cfg[mi];
+                batch.cfg_a[row * cfg_dim..(row + 1) * cfg_dim]
+                    .copy_from_slice(&cfgs[ca * cfg_dim..(ca + 1) * cfg_dim]);
+                batch.cfg_b[row * cfg_dim..(row + 1) * cfg_dim]
+                    .copy_from_slice(&cfgs[cb * cfg_dim..(cb + 1) * cfg_dim]);
+                batch.z_a[row * latent_dim..(row + 1) * latent_dim]
+                    .copy_from_slice(&z_all[ca * latent_dim..(ca + 1) * latent_dim]);
+                batch.z_b[row * latent_dim..(row + 1) * latent_dim]
+                    .copy_from_slice(&z_all[cb * latent_dim..(cb + 1) * latent_dim]);
+                // Higher score must mean faster config.
+                let d = rec.costs[cb] - rec.costs[ca];
+                batch.sign[row] = if d > 0.0 {
+                    1.0
+                } else if d < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                };
+                batch.weight[row] = if d == 0.0 { 0.0 } else { 1.0 };
+            }
+            loss_sum += driver.train_step(&batch)? as f64;
+        }
+        let train_loss = loss_sum / opts.batches_per_epoch as f64;
+
+        // ---- validation ranking metrics --------------------------------
+        let (mut prl, mut opa, mut ktau) = (f64::NAN, f64::NAN, f64::NAN);
+        if opts.val_matrices > 0 && !val_idx.is_empty() {
+            let mut prls = Vec::new();
+            let mut opas = Vec::new();
+            let mut ktaus = Vec::new();
+            for &mi in val_idx.iter().take(opts.val_matrices) {
+                let rec = &ds.records[mi];
+                let mut vrng = rng.fork(mi as u64);
+                let pick =
+                    vrng.sample_indices(rec.costs.len(), opts.val_configs.min(rec.costs.len()));
+                let s = driver.featurize(&[&rec.dmap])?.remove(0);
+                let cfgs = &per_matrix_cfg[mi];
+                let mut cfg_rows = Vec::with_capacity(pick.len() * cfg_dim);
+                let mut z_rows = Vec::with_capacity(pick.len() * latent_dim);
+                let mut truth = Vec::with_capacity(pick.len());
+                for &ci in &pick {
+                    cfg_rows.extend_from_slice(&cfgs[ci * cfg_dim..(ci + 1) * cfg_dim]);
+                    z_rows.extend_from_slice(&z_all[ci * latent_dim..(ci + 1) * latent_dim]);
+                    truth.push(rec.costs[ci]);
+                }
+                let scores = driver.score_configs(&s, &cfg_rows, &z_rows)?;
+                prls.push(stats::pairwise_ranking_loss(&scores, &truth, 1.0));
+                opas.push(stats::ordered_pair_accuracy(&scores.iter().map(|x| -x).collect::<Vec<_>>(), &truth));
+                ktaus.push(stats::kendall_tau(&scores.iter().map(|x| -x).collect::<Vec<_>>(), &truth));
+            }
+            prl = stats::mean(&prls);
+            opa = stats::mean(&opas);
+            ktau = stats::mean(&ktaus);
+        }
+        if opts.log_every > 0 && epoch % opts.log_every == 0 {
+            crate::info!(
+                "[{}] epoch {epoch}: loss={train_loss:.4} prl={prl:.3} opa={opa:.3} ktau={ktau:.3}",
+                driver.variant
+            );
+        }
+        logs.push(EpochLog { epoch, train_loss, val_prl: prl, val_opa: opa, val_ktau: ktau });
+    }
+    Ok(logs)
+}

@@ -1,0 +1,119 @@
+//! Hand-rolled micro/end-to-end benchmark harness (criterion is not
+//! available offline). Benches under `rust/benches/` use
+//! `harness = false` and drive this: warmup, timed iterations, and a
+//! one-line report with mean / p50 / p95 plus optional throughput.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<42} iters={:<4} mean={} p50={} p95={} min={}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            fmt_time(self.min_s),
+        );
+    }
+
+    pub fn report_throughput(&self, items: f64, unit: &str) {
+        println!(
+            "bench {:<42} iters={:<4} mean={} p50={} thrpt={:.1} {unit}/s",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            items / self.mean_s,
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:7.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:7.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:7.2}ms", s * 1e3)
+    } else {
+        format!("{s:7.3}s ")
+    }
+}
+
+/// Run `f` with `warmup` untimed iterations then up to `iters` timed
+/// iterations (stopping early after `max_secs` of measurement).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, max_secs: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let budget = Instant::now();
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if budget.elapsed().as_secs_f64() > max_secs {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        p50_s: samples[n / 2],
+        p95_s: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        min_s: samples[0],
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 1, 16, 1.0, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p50_s <= r.p95_s + 1e-9);
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let t = Instant::now();
+        let _ = bench("sleepy", 0, 1000, 0.05, || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        });
+        assert!(t.elapsed().as_secs_f64() < 1.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains('s'));
+    }
+}

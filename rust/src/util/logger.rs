@@ -1,0 +1,60 @@
+//! Tiny timestamped stderr logger with runtime-settable verbosity.
+//! (No `log`/`env_logger` facade needed for a single binary.)
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=quiet 1=warn 2=info 3=debug
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Seconds since first log call, for coarse progress timing.
+pub fn elapsed() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(lvl: u8, tag: &str, msg: std::fmt::Arguments) {
+    if lvl <= level() {
+        eprintln!("[{:>9.3}s {tag}] {msg}", elapsed());
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logger::log(2, "info", format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::logger::log(1, "warn", format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logger::log(3, "debug", format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        let old = level();
+        set_level(3);
+        assert_eq!(level(), 3);
+        set_level(old);
+    }
+
+    #[test]
+    fn elapsed_monotone() {
+        let a = elapsed();
+        let b = elapsed();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained substrates: PRNG, JSON, statistics, thread pool,
+//! tables/CSV, logging, and a bench harness. The offline build has only
+//! `xla` + `anyhow` as external crates, so everything else lives here.
+
+pub mod bench;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod table;

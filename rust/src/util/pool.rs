@@ -1,0 +1,111 @@
+//! A small scoped work-pool built on `std::thread::scope`.
+//!
+//! The offline environment has no `rayon`, so dataset collection (the
+//! paper's "32 machines × 64 cores for three months", scaled down) uses
+//! this: split a list of independent jobs across N OS threads, collect
+//! results in input order. Panics in workers propagate to the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default: all available cores,
+/// bounded to keep the interactive machine responsive.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 32)
+}
+
+/// Map `f` over `items` in parallel, preserving input order.
+///
+/// Work-stealing is approximated with an atomic cursor: threads pull the
+/// next unclaimed index, so uneven per-item costs (big matrices next to
+/// small ones) still balance well.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker produced no result"))
+        .collect()
+}
+
+/// Parallel for-each without collecting results.
+pub fn par_for<T, F>(items: &[T], threads: usize, f: F)
+where
+    T: Sync,
+    F: Fn(usize, &T) + Sync,
+{
+    let _ = par_map(items, threads, |i, t| {
+        f(i, t);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let items = vec![1, 2, 3];
+        assert_eq!(par_map(&items, 1, |i, &x| i + x), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u8> = vec![];
+        let out: Vec<u8> = par_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Items with wildly different costs still all complete.
+        let items: Vec<u64> = (0..64).map(|i| if i % 7 == 0 { 200_000 } else { 10 }).collect();
+        let out = par_map(&items, 8, |_, &n| (0..n).fold(0u64, |a, b| a.wrapping_add(b)));
+        assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let items = vec![5usize, 6];
+        let out = par_map(&items, 16, |_, &x| x + 1);
+        assert_eq!(out, vec![6, 7]);
+    }
+}

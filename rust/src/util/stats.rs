@@ -1,0 +1,277 @@
+//! Statistics used across training, evaluation and reporting:
+//! geometric mean, percentiles, ranking-quality metrics (Ordered Pair
+//! Accuracy, Kendall's τ), Absolute Percentage Error, and the host-side
+//! pairwise ranking loss used for validation curves (Fig 6).
+
+/// Geometric mean of strictly positive values. Values `<= 0` are clamped
+/// to a tiny epsilon so a single degenerate sample cannot poison a report.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = xs.iter().map(|&x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// p-th percentile (0..=100) with linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Ordered Pair Accuracy: fraction of pairs (i, j) whose predicted order
+/// matches the true order. Ties in the truth are skipped (paper §4.4).
+pub fn ordered_pair_accuracy(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let n = pred.len();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dt = truth[i] - truth[j];
+            if dt == 0.0 {
+                continue;
+            }
+            total += 1;
+            let dp = pred[i] - pred[j];
+            if dp * dt > 0.0 {
+                correct += 1;
+            }
+        }
+    }
+    if total == 0 {
+        return f64::NAN;
+    }
+    correct as f64 / total as f64
+}
+
+/// Kendall's τ-b (handles ties in either ranking).
+pub fn kendall_tau(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let n = pred.len();
+    let (mut concordant, mut discordant) = (0i64, 0i64);
+    let (mut ties_p, mut ties_t) = (0i64, 0i64);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dp = pred[i] - pred[j];
+            let dt = truth[i] - truth[j];
+            if dp == 0.0 && dt == 0.0 {
+                continue;
+            } else if dp == 0.0 {
+                ties_p += 1;
+            } else if dt == 0.0 {
+                ties_t += 1;
+            } else if dp * dt > 0.0 {
+                concordant += 1;
+            } else {
+                discordant += 1;
+            }
+        }
+    }
+    let n0 = concordant + discordant;
+    let denom = (((n0 + ties_p) as f64) * ((n0 + ties_t) as f64)).sqrt();
+    if denom == 0.0 {
+        return f64::NAN;
+    }
+    (concordant - discordant) as f64 / denom
+}
+
+/// Pairwise margin ranking loss over all pairs (host-side mirror of the
+/// L1 ranking kernel; used for validation curves where we already have
+/// all scores). `truth` are runtimes: lower is better, and the model is
+/// trained so that *higher score = faster config*.
+pub fn pairwise_ranking_loss(pred: &[f64], truth: &[f64], margin: f64) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let n = pred.len();
+    let mut loss = 0.0;
+    let mut count = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let sign = -(truth[i] - truth[j]).signum(); // faster ⇒ higher score
+            if sign == 0.0 {
+                continue;
+            }
+            loss += (margin - sign * (pred[i] - pred[j])).max(0.0);
+            count += 1;
+        }
+    }
+    if count == 0 {
+        return 0.0;
+    }
+    loss / count as f64
+}
+
+/// Absolute Percentage Error between the runtime of the chosen config and
+/// the optimal runtime, averaged over matrices (Appendix A.2).
+pub fn ape(chosen: &[f64], optimal: &[f64]) -> f64 {
+    assert_eq!(chosen.len(), optimal.len());
+    if chosen.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = chosen
+        .iter()
+        .zip(optimal)
+        .map(|(&c, &o)| ((c - o).abs() / o.max(1e-12)) * 100.0)
+        .sum();
+    s / chosen.len() as f64
+}
+
+/// Pearson correlation, used to sanity-check cross-platform cost
+/// landscape correlation (the premise that makes transfer possible).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    let den = (dx * dy).sqrt();
+    if den == 0.0 {
+        return f64::NAN;
+    }
+    num / den
+}
+
+/// Spearman rank correlation (Pearson over ranks, average-rank ties).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn opa_perfect_and_inverted() {
+        let t = [3.0, 1.0, 2.0];
+        assert_eq!(ordered_pair_accuracy(&t, &t), 1.0);
+        let inv: Vec<f64> = t.iter().map(|x| -x).collect();
+        assert_eq!(ordered_pair_accuracy(&inv, &t), 0.0);
+    }
+
+    #[test]
+    fn ktau_matches_known() {
+        // Perfect agreement = 1, perfect disagreement = -1.
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [4.0, 3.0, 2.0, 1.0];
+        assert!((kendall_tau(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((kendall_tau(&a, &b) + 1.0).abs() < 1e-12);
+        // One swap out of 6 pairs: tau = (5-1)/6.
+        let c = [2.0, 1.0, 3.0, 4.0];
+        assert!((kendall_tau(&c, &a) - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranking_loss_zero_when_separated() {
+        // Higher score for lower runtime, margin satisfied.
+        let truth = [1.0, 2.0, 3.0];
+        let pred = [30.0, 20.0, 10.0];
+        assert_eq!(pairwise_ranking_loss(&pred, &truth, 1.0), 0.0);
+        // Flat predictions pay exactly the margin on every pair.
+        let flat = [0.0, 0.0, 0.0];
+        assert!((pairwise_ranking_loss(&flat, &truth, 1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ape_basic() {
+        assert!((ape(&[1.1, 2.0], &[1.0, 2.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_spearman() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [2.0, 4.0, 6.0, 8.0, 10.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [1.0, 8.0, 27.0, 64.0, 125.0]; // monotone, nonlinear
+        assert!(pearson(&x, &z) < 1.0);
+        assert!((spearman(&x, &z) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranks_handle_ties() {
+        let r = ranks(&[1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+}

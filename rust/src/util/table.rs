@@ -1,0 +1,136 @@
+//! Aligned text tables and CSV writers for experiment reports.
+//!
+//! Every experiment regenerator (`cognate experiment <id>`) prints a
+//! human-readable table to stdout and writes the same rows as CSV under
+//! `results/`, so figures can be re-plotted from the CSVs.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Format a float with sensible precision for reports.
+    pub fn f(x: f64) -> String {
+        if x.is_nan() {
+            "-".to_string()
+        } else if x == 0.0 || (x.abs() >= 0.01 && x.abs() < 100_000.0) {
+            format!("{x:.3}")
+        } else {
+            format!("{x:.3e}")
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<width$}  ", c, width = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.header);
+        let total: usize = widths.iter().map(|w| w + 2).sum();
+        out.push_str(&"-".repeat(total.max(4)));
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.header.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write the CSV under `dir/<name>.csv`, creating the directory.
+    pub fn save_csv(&self, dir: &Path, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{name}.csv")), self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "speedup"]);
+        t.row(vec!["cognate-top5".into(), Table::f(1.4712)]);
+        t.row(vec!["waco+fa".into(), Table::f(1.04)]);
+        let s = t.render();
+        assert!(s.contains("cognate-top5"));
+        assert!(s.contains("1.471"));
+        // Columns aligned: both rows have the same prefix width.
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[2].find("1.471"), lines[3].find("1.040"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn float_formats() {
+        assert_eq!(Table::f(f64::NAN), "-");
+        assert_eq!(Table::f(1.5), "1.500");
+        assert!(Table::f(1e-9).contains('e'));
+    }
+}

@@ -1,0 +1,132 @@
+//! End-to-end pipeline integration (micro scale): collection →
+//! simulators → datasets → AE → pre-train → few-shot fine-tune →
+//! top-k evaluation, plus the batched tuning service. Requires
+//! `make artifacts`.
+
+use cognate::config::PlatformId;
+use cognate::coordinator::{serve, Pipeline, Scale};
+use cognate::kernels::Op;
+use cognate::model::ModelDriver;
+use cognate::search::{evaluate, oracle_summary};
+use cognate::train::{train, TrainOpts, ZEncoder};
+
+fn micro_scale() -> Scale {
+    let mut s = Scale::small();
+    s.per_cell = 1; // 30 matrices
+    s.max_dim = 640;
+    s.pretrain_matrices = 10;
+    s.finetune_matrices = 3;
+    s.eval_matrices = 8;
+    s.pretrain_opts = TrainOpts {
+        epochs: 3,
+        batches_per_epoch: 10,
+        val_matrices: 0,
+        ..TrainOpts::default()
+    };
+    s.finetune_opts = TrainOpts {
+        epochs: 2,
+        batches_per_epoch: 6,
+        val_matrices: 0,
+        ..TrainOpts::default()
+    };
+    s.ae_steps = 60;
+    s.seed = 0xBEEF;
+    s
+}
+
+#[test]
+fn micro_pipeline_pretrain_finetune_evaluate() {
+    let mut pipe = Pipeline::new(micro_scale()).expect("artifacts present");
+    pipe.results_dir = std::env::temp_dir().join("cognate_it_results");
+    let op = Op::Spmm;
+
+    // Source + target datasets through the simulators.
+    let src = pipe.dataset(PlatformId::Cpu, op).unwrap();
+    let tgt = pipe.dataset(PlatformId::Spade, op).unwrap();
+    assert_eq!(src.records.len(), tgt.records.len());
+    assert_eq!(tgt.records[0].costs.len(), 256);
+
+    // Latent encoders.
+    let z_src = pipe.trained_ae(PlatformId::Cpu, "ae", 1).unwrap();
+    let z_tgt = pipe.trained_ae(PlatformId::Spade, "ae", 2).unwrap();
+
+    // Pre-train on CPU.
+    let (src_pool, _) = pipe.splits(&src);
+    let idx = pipe.pretrain_subset(&src, &src_pool, pipe.scale.pretrain_matrices);
+    let mut driver = ModelDriver::init(pipe.rt.clone(), "cognate", 0).unwrap();
+    let logs = train(&mut driver, &z_src, &src, &idx, &[], &pipe.scale.pretrain_opts.clone()).unwrap();
+    assert!(!logs.is_empty());
+    assert!(logs.iter().all(|l| l.train_loss.is_finite()));
+    // Loss should drop from the first epoch to the best epoch.
+    let best = logs.iter().map(|l| l.train_loss).fold(f64::INFINITY, f64::min);
+    assert!(best < logs[0].train_loss + 1e-9, "no training progress");
+
+    // Fine-tune on SPADE with 3 matrices and evaluate.
+    let (pool, eval_idx) = pipe.splits(&tgt);
+    let ft: Vec<usize> = pool.into_iter().take(3).collect();
+    let mut tuned = driver.fork_for_finetune();
+    train(&mut tuned, &z_tgt, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone()).unwrap();
+    let default_index = cognate::config::default_config_index(PlatformId::Spade);
+    let top5 = evaluate(&tuned, &z_tgt, &tgt, &eval_idx, default_index, 5).unwrap();
+    let oracle = oracle_summary(&tgt, &eval_idx, default_index);
+    assert!(top5.geomean_speedup.is_finite() && top5.geomean_speedup > 0.0);
+    assert!(
+        top5.geomean_speedup <= oracle.geomean_speedup + 1e-9,
+        "cannot beat the oracle"
+    );
+    // Even a micro-trained model should not be catastrophically below
+    // the default config with top-5 safety.
+    assert!(
+        top5.geomean_speedup > 0.5,
+        "speedup collapsed: {}",
+        top5.geomean_speedup
+    );
+}
+
+#[test]
+fn tuning_service_round_trip() {
+    let pipe = Pipeline::new(micro_scale()).expect("artifacts present");
+    let driver = ModelDriver::init(pipe.rt.clone(), "cognate", 1).unwrap();
+    let zenc = ZEncoder::Zero;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve::serve(
+            driver,
+            zenc,
+            PlatformId::Spade,
+            "127.0.0.1:0",
+            Some(3),
+            move |a| {
+                let _ = addr_tx.send(a);
+            },
+        )
+        .unwrap();
+    });
+    let addr = addr_rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+
+    // Three concurrent clients — exercises the dynamic batcher.
+    let mut clients = Vec::new();
+    for id in 0..3 {
+        clients.push(std::thread::spawn(move || {
+            let m = cognate::sparse::gen::generate(
+                cognate::sparse::gen::Family::Rmat,
+                300,
+                300,
+                0.02,
+                id as u64,
+            );
+            serve::request(addr, id, 5, &m).unwrap()
+        }));
+    }
+    for c in clients {
+        let resp = c.join().unwrap();
+        assert!(resp.get("error").is_none(), "server error: {}", resp.to_string());
+        let top = resp.req("top").as_arr().unwrap();
+        assert_eq!(top.len(), 5);
+        for t in top {
+            assert!(t.as_usize().unwrap() < 256);
+        }
+        assert!(resp.req("latency_ms").as_f64().unwrap() >= 0.0);
+    }
+    let _ = server; // server exits after max_jobs connections
+}

@@ -1,0 +1,89 @@
+//! Integration tests over real AOT artifacts (requires `make artifacts`).
+
+use cognate::model::{AeDriver, ModelDriver, TrainBatch};
+use cognate::runtime::{artifacts_dir, Runtime};
+use cognate::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load(&artifacts_dir()).expect("run `make artifacts` first"))
+}
+
+fn random_batch(d: &ModelDriver, seed: u64) -> TrainBatch {
+    let mut rng = Rng::new(seed);
+    let b = d.train_b();
+    let mk = |n: usize, rng: &mut Rng| (0..n).map(|_| rng.next_f32()).collect::<Vec<_>>();
+    TrainBatch {
+        dmap: mk(b * d.dmap_len(), &mut rng),
+        cfg_a: mk(b * d.cfg_dim, &mut rng),
+        z_a: mk(b * d.latent_dim(), &mut rng),
+        cfg_b: mk(b * d.cfg_dim, &mut rng),
+        z_b: mk(b * d.latent_dim(), &mut rng),
+        sign: (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+        weight: vec![1.0; b],
+    }
+}
+
+#[test]
+fn init_train_score_roundtrip_and_latency() {
+    let rt = runtime();
+    let mut d = ModelDriver::init(rt.clone(), "cognate", 0).unwrap();
+    let batch = random_batch(&d, 1);
+    // Warm-up (compiles the artifact).
+    let l0 = d.train_step(&batch).unwrap();
+    assert!(l0.is_finite());
+    let t0 = Instant::now();
+    let mut last = l0;
+    for _ in 0..5 {
+        last = d.train_step(&batch).unwrap();
+    }
+    let per_step = t0.elapsed().as_secs_f64() / 5.0;
+    eprintln!("train_step latency: {:.1} ms (loss {l0:.4} -> {last:.4})", per_step * 1e3);
+    assert!(last <= l0 * 1.5, "loss exploding: {l0} -> {last}");
+
+    // featurize + score
+    let dmap: Vec<f32> = (0..d.dmap_len()).map(|i| (i % 7) as f32 / 7.0).collect();
+    let t1 = Instant::now();
+    let s = d.featurize(&[&dmap]).unwrap().remove(0);
+    eprintln!("featurize latency: {:.1} ms", t1.elapsed().as_secs_f64() * 1e3);
+    assert_eq!(s.len(), d.embed_dim());
+    let n = 256;
+    let cfgs: Vec<f32> = (0..n * d.cfg_dim).map(|i| (i % 5) as f32 / 5.0).collect();
+    let zs: Vec<f32> = (0..n * d.latent_dim()).map(|i| (i % 3) as f32 / 3.0).collect();
+    let t2 = Instant::now();
+    let scores = d.score_configs(&s, &cfgs, &zs).unwrap();
+    eprintln!("score 256 configs: {:.1} ms", t2.elapsed().as_secs_f64() * 1e3);
+    assert_eq!(scores.len(), n);
+    assert!(scores.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn ae_train_and_encode() {
+    let rt = runtime();
+    let mut ae = AeDriver::init(rt.clone(), "ae", 0).unwrap();
+    let b = rt.dim("SCORE_B");
+    let hd = rt.dim("HET_DIM");
+    let lat = rt.dim("LATENT_DIM");
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..b * hd).map(|_| if rng.next_f64() > 0.5 { 1.0 } else { 0.0 }).collect();
+    let eps = vec![0f32; b * lat];
+    let first = ae.train_step(&x, &eps).unwrap();
+    let mut last = first;
+    for _ in 0..60 {
+        last = ae.train_step(&x, &eps).unwrap();
+    }
+    assert!(last < first, "ae not learning: {first} -> {last}");
+    let z = ae.encode(&x[..3 * hd]).unwrap();
+    assert_eq!(z.len(), 3 * lat);
+}
+
+#[test]
+fn init_deterministic_per_seed() {
+    let rt = runtime();
+    let a = ModelDriver::init(rt.clone(), "waco_fm", 7).unwrap();
+    let b = ModelDriver::init(rt.clone(), "waco_fm", 7).unwrap();
+    let c = ModelDriver::init(rt.clone(), "waco_fm", 8).unwrap();
+    assert_eq!(a.theta, b.theta);
+    assert_ne!(a.theta, c.theta);
+}

@@ -1,0 +1,230 @@
+//! Randomized property-style tests over the L3 substrates.
+//!
+//! `proptest` is not available in the offline vendor set, so these use
+//! the crate's own seeded PRNG: each test draws many random instances
+//! and asserts invariants — same discipline, reproducible by seed.
+
+use cognate::config::{self, Config};
+use cognate::kernels::{sddmm_ref, sddmm_scheduled, spmm_ref, spmm_scheduled, SddmmSchedule, SpmmSchedule};
+use cognate::platform::tiles::{makespan, tile_grid};
+use cognate::sparse::csr::Csr;
+use cognate::sparse::gen::{generate, Family, ALL_FAMILIES};
+use cognate::sparse::reorder::{apply, permutation, ALL_REORDERS};
+use cognate::util::json::Json;
+use cognate::util::rng::Rng;
+
+fn random_matrix(rng: &mut Rng) -> Csr {
+    let fam = *rng.choose(&ALL_FAMILIES);
+    let rows = 16 + rng.next_usize(400);
+    let cols = 16 + rng.next_usize(400);
+    let density = 10f64.powf(rng.range_f64(-2.5, -0.8));
+    generate(fam, rows, cols, density, rng.next_u64())
+}
+
+#[test]
+fn prop_from_coo_always_valid_with_duplicates() {
+    let mut rng = Rng::new(101);
+    for _ in 0..50 {
+        let rows = 1 + rng.next_usize(64);
+        let cols = 1 + rng.next_usize(64);
+        let n = rng.next_usize(300);
+        let coo: Vec<(u32, u32, f32)> = (0..n)
+            .map(|_| (rng.next_usize(rows) as u32, rng.next_usize(cols) as u32, rng.next_f32()))
+            .collect();
+        let total: f64 = coo.iter().map(|&(_, _, v)| v as f64).sum();
+        let m = Csr::from_coo(rows, cols, coo);
+        m.validate().unwrap();
+        // Value mass conserved under duplicate merging.
+        let mass: f64 = m.values.iter().map(|&v| v as f64).sum();
+        assert!((mass - total).abs() < 1e-3 * (1.0 + total.abs()), "{mass} vs {total}");
+    }
+}
+
+#[test]
+fn prop_transpose_involution_and_permute_preserves_rows() {
+    let mut rng = Rng::new(102);
+    for _ in 0..20 {
+        let m = random_matrix(&mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        for &s in &ALL_REORDERS {
+            let p = permutation(&m, s);
+            let pm = apply(&m, s);
+            pm.validate().unwrap();
+            // Each output row is exactly the claimed input row.
+            for (new_r, &old_r) in p.iter().enumerate() {
+                assert_eq!(pm.row_indices(new_r), m.row_indices(old_r));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_spmm_schedules_equal_oracle() {
+    let mut rng = Rng::new(103);
+    for _ in 0..12 {
+        let m = random_matrix(&mut rng);
+        let n = 1 + rng.next_usize(48);
+        let b: Vec<f32> = (0..m.cols * n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let mut expect = vec![0f32; m.rows * n];
+        spmm_ref(&m, &b, n, &mut expect);
+        let s = SpmmSchedule {
+            i_block: 1 + rng.next_usize(300),
+            k_block: 1 + rng.next_usize(64),
+            outer_k: rng.next_f64() < 0.5,
+        };
+        let mut got = vec![0f32; m.rows * n];
+        spmm_scheduled(&m, &b, n, s, &mut got);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() <= 1e-4 * (1.0 + e.abs()), "{s:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_sddmm_schedules_equal_oracle() {
+    let mut rng = Rng::new(104);
+    for _ in 0..12 {
+        let m = random_matrix(&mut rng);
+        let k = 1 + rng.next_usize(48);
+        let b: Vec<f32> = (0..m.rows * k).map(|_| rng.next_f32() - 0.5).collect();
+        let c: Vec<f32> = (0..k * m.cols).map(|_| rng.next_f32() - 0.5).collect();
+        let mut expect = vec![0f32; m.nnz()];
+        sddmm_ref(&m, &b, &c, k, &mut expect);
+        let s = SddmmSchedule {
+            i_block: 1 + rng.next_usize(200),
+            k_block: 1 + rng.next_usize(64),
+            outer_k: rng.next_f64() < 0.5,
+        };
+        let mut got = vec![0f32; m.nnz()];
+        sddmm_scheduled(&m, &b, &c, k, s, &mut got);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() <= 1e-3 * (1.0 + e.abs()), "{s:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_tile_grid_conserves_nnz_and_bounds_ucols() {
+    let mut rng = Rng::new(105);
+    for _ in 0..30 {
+        let m = random_matrix(&mut rng);
+        let rp = 1 + rng.next_usize(m.rows + 10);
+        let cp = 1 + rng.next_usize(m.cols + 10);
+        let g = tile_grid(&m, rp, cp);
+        assert_eq!(g.tiles.iter().map(|t| t.nnz as usize).sum::<usize>(), m.nnz());
+        for t in &g.tiles {
+            assert!(t.ucols <= t.nnz);
+            assert!(t.ucols as usize <= g.col_panel);
+        }
+        assert_eq!(g.panel_rows.iter().map(|&r| r as usize).sum::<usize>(), m.rows);
+    }
+}
+
+#[test]
+fn prop_makespan_bounds() {
+    let mut rng = Rng::new(106);
+    for _ in 0..60 {
+        let n = 1 + rng.next_usize(50);
+        let w = 1 + rng.next_usize(16);
+        let costs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 100.0)).collect();
+        let (mk, mean) = makespan(&costs, w);
+        let mx = costs.iter().cloned().fold(0.0f64, f64::max);
+        let total: f64 = costs.iter().sum();
+        assert!(mk + 1e-9 >= mean, "makespan below mean");
+        assert!(mk + 1e-9 >= mx, "makespan below max job");
+        assert!(mk <= total + 1e-9, "makespan above serial time");
+    }
+}
+
+#[test]
+fn prop_encodings_deterministic_and_sized() {
+    let mut rng = Rng::new(107);
+    let spaces: Vec<Config> = config::cpu_space()
+        .into_iter()
+        .map(Config::Cpu)
+        .chain(config::spade_space().into_iter().map(Config::Spade))
+        .chain(config::gpu_space().into_iter().map(Config::Gpu))
+        .collect();
+    for _ in 0..200 {
+        let cfg = spaces[rng.next_usize(spaces.len())];
+        let cols = 16 + rng.next_usize(100_000);
+        let m1 = config::mapped_vector(&cfg, cols);
+        let m2 = config::mapped_vector(&cfg, cols);
+        assert_eq!(m1, m2);
+        assert_eq!(m1.len(), config::MAPPED_DIM);
+        assert_eq!(config::het_vector(&cfg).len(), config::HET_DIM);
+        assert_eq!(config::fa_vector(&cfg, cols).len(), config::FA_DIM);
+        // All features bounded — no exploding inputs for the model.
+        for &v in m1.iter() {
+            assert!((0.0..=1.5).contains(&v), "mapped feature out of range: {v}");
+        }
+    }
+}
+
+#[test]
+fn prop_platform_costs_scale_sanely() {
+    // Costs must be positive, finite, and monotone-ish in problem size.
+    use cognate::kernels::Op;
+    use cognate::platform::{make_platform, CostModel};
+    let mut rng = Rng::new(108);
+    for id in [config::PlatformId::Cpu, config::PlatformId::Spade, config::PlatformId::Gpu] {
+        let p = make_platform(id);
+        for _ in 0..4 {
+            let m = random_matrix(&mut rng);
+            let costs = p.eval_all(&m, Op::Spmm);
+            assert_eq!(costs.len(), p.num_configs());
+            assert!(costs.iter().all(|c| c.is_finite() && *c > 0.0), "{id:?}");
+        }
+        // 4x the nnz at the same shape should not be cheaper at default.
+        let small = generate(Family::Uniform, 600, 600, 0.004, 9);
+        let big = generate(Family::Uniform, 600, 600, 0.016, 9);
+        let cs = p.eval_all(&small, Op::Spmm)[p.default_index()];
+        let cb = p.eval_all(&big, Op::Spmm)[p.default_index()];
+        assert!(cb > cs, "{id:?}: {cb} !> {cs}");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(109);
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.next_usize(4) } else { rng.next_usize(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_f64() * 2e6).round() / 100.0 - 1e4),
+            3 => Json::Str(
+                (0..rng.next_usize(12))
+                    .map(|_| *rng.choose(&['a', 'ß', '"', '\\', '\n', 'z', '💡', ' ']))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.next_usize(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_usize(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..300 {
+        let v = random_json(&mut rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("parse {s:?}: {e}"));
+        assert_eq!(back, v, "roundtrip failed for {s}");
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(pretty, v);
+    }
+}
+
+#[test]
+fn prop_density_map_bounded_and_deterministic() {
+    use cognate::sparse::features::{density_map, DMAP_LEN};
+    let mut rng = Rng::new(110);
+    for _ in 0..20 {
+        let m = random_matrix(&mut rng);
+        let d1 = density_map(&m);
+        let d2 = density_map(&m);
+        assert_eq!(d1, d2);
+        assert_eq!(d1.len(), DMAP_LEN);
+        assert!(d1.iter().all(|&v| (0.0..=1.001).contains(&v)));
+    }
+}
