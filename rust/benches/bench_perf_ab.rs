@@ -1,17 +1,173 @@
-//! §Perf A/B harness: same train/featurize/score benches against the
-//! artifacts directory named in COGNATE_ARTIFACTS — used to compare
-//! candidate kernel schedules (e.g. COGNATE_BLOCK_M) against baseline.
+//! Perf A/B harness.
+//!
+//! Part 1 (always runs, no artifacts needed): seed-vs-optimized kernel
+//! A/B. The A-side is a faithful copy of the seed's `spmm_parallel`
+//! (even row-*count* partition, schedule dropped); the B-side is the
+//! current nnz-balanced, schedule-honoring implementation. Run on a
+//! degree-sorted power-law matrix — the worst case for row-count
+//! splitting, since the first chunk holds most of the nonzeros. Results
+//! land in `BENCH_kernels.json` at the repo root (override with
+//! `BENCH_OUT`).
+//!
+//! Part 2 (skipped gracefully when AOT artifacts are absent): the
+//! original train/featurize/score benches against the artifacts
+//! directory named in COGNATE_ARTIFACTS — used to compare candidate
+//! kernel schedules (e.g. COGNATE_BLOCK_M) against baseline.
+
+use cognate::kernels::{
+    sddmm_parallel, sddmm_scheduled, spmm_parallel, SddmmSchedule, SpmmSchedule, DENSE_DIM,
+};
 use cognate::model::{ModelDriver, TrainBatch};
 use cognate::runtime::{artifacts_dir, Runtime};
+use cognate::sparse::csr::Csr;
+use cognate::sparse::gen::{generate, Family};
+use cognate::sparse::reorder::{apply, Reorder};
 use cognate::util::bench::bench;
+use cognate::util::json::Json;
 use cognate::util::rng::Rng;
 use std::sync::Arc;
 
-fn main() {
-    let dir = artifacts_dir();
-    println!("artifacts: {dir:?}");
-    let rt = Arc::new(Runtime::load(&dir).expect("artifacts missing"));
-    let mut d = ModelDriver::init(rt.clone(), "cognate", 0).unwrap();
+/// The seed's parallel SpMM, preserved verbatim as the A-side baseline:
+/// rows split evenly by count, naive inner loop, schedule ignored.
+fn seed_spmm_parallel(
+    a: &Csr,
+    b: &[f32],
+    n: usize,
+    s: SpmmSchedule,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), a.rows * n);
+    out.fill(0.0);
+    let threads = threads.max(1);
+    let rows_per = a.rows.div_ceil(threads);
+    let chunks: Vec<(usize, &mut [f32])> = out
+        .chunks_mut(rows_per * n)
+        .enumerate()
+        .map(|(t, c)| (t * rows_per, c))
+        .collect();
+    std::thread::scope(|scope| {
+        for (row0, chunk) in chunks {
+            scope.spawn(move || {
+                let rows = chunk.len() / n;
+                for i in 0..rows {
+                    let gi = row0 + i;
+                    let dst = &mut chunk[i * n..(i + 1) * n];
+                    for (&j, &v) in a.row_indices(gi).iter().zip(a.row_values(gi)) {
+                        let brow = &b[j as usize * n..(j as usize + 1) * n];
+                        for k in 0..n {
+                            dst[k] += v * brow[k];
+                        }
+                    }
+                }
+                let _ = s;
+            });
+        }
+    });
+}
+
+/// Repo root = nearest ancestor holding CHANGES.md or .git (cargo runs
+/// bench binaries from the package dir, one level down).
+fn repo_root() -> std::path::PathBuf {
+    let start = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut d = start.clone();
+    loop {
+        if d.join("CHANGES.md").exists() || d.join(".git").exists() {
+            return d;
+        }
+        if !d.pop() {
+            return start;
+        }
+    }
+}
+
+fn kernel_ab() -> Json {
+    let threads = 8usize;
+    let n = DENSE_DIM;
+    // Degree-sorted power law: nnz concentrated in the leading rows, the
+    // pathological case for even row-count partitioning.
+    let raw = generate(Family::PowerLaw, 4096, 4096, 0.004, 7);
+    let m = apply(&raw, Reorder::DegreeDesc);
+    let mut rng = Rng::new(0xAB);
+    let b: Vec<f32> = (0..m.cols * n).map(|_| rng.next_f32() - 0.5).collect();
+    let bt: Vec<f32> = (0..m.rows * n).map(|_| rng.next_f32() - 0.5).collect();
+    let c: Vec<f32> = (0..n * m.cols).map(|_| rng.next_f32() - 0.5).collect();
+    let ss = SpmmSchedule::default();
+    let sd = SddmmSchedule::default();
+
+    // Correctness gate before timing: both sides accumulate j-ascending
+    // per output element, so they must agree bitwise.
+    let mut out_a = vec![0f32; m.rows * n];
+    let mut out_b = vec![0f32; m.rows * n];
+    seed_spmm_parallel(&m, &b, n, ss, threads, &mut out_a);
+    spmm_parallel(&m, &b, n, ss, threads, &mut out_b);
+    assert_eq!(out_a, out_b, "seed and nnz-balanced SpMM disagree");
+
+    let r_seed = bench("spmm/seed-rowsplit/8t", 3, 40, 5.0, || {
+        seed_spmm_parallel(&m, &b, n, ss, threads, &mut out_a)
+    });
+    r_seed.report();
+    let r_new = bench("spmm/nnz-balanced/8t", 3, 40, 5.0, || {
+        spmm_parallel(&m, &b, n, ss, threads, &mut out_b)
+    });
+    r_new.report();
+    let r_one = bench("spmm/nnz-balanced/1t", 1, 20, 5.0, || {
+        spmm_parallel(&m, &b, n, ss, 1, &mut out_b)
+    });
+    r_one.report();
+
+    let mut vals_a = vec![0f32; m.nnz()];
+    let mut vals_b = vec![0f32; m.nnz()];
+    let r_sd_one = bench("sddmm/scheduled/1t", 1, 20, 5.0, || {
+        sddmm_scheduled(&m, &bt, &c, n, sd, &mut vals_a)
+    });
+    r_sd_one.report();
+    let r_sd_par = bench("sddmm/parallel/8t", 3, 40, 5.0, || {
+        sddmm_parallel(&m, &bt, &c, n, sd, threads, &mut vals_b)
+    });
+    r_sd_par.report();
+    assert_eq!(vals_a, vals_b, "parallel SDDMM disagrees with scheduled");
+
+    let spmm_speedup = r_seed.mean_s / r_new.mean_s.max(1e-12);
+    let sddmm_speedup = r_sd_one.mean_s / r_sd_par.mean_s.max(1e-12);
+    println!("spmm  8t speedup vs seed rowsplit: {spmm_speedup:.2}x");
+    println!("sddmm 8t speedup vs 1t:            {sddmm_speedup:.2}x");
+
+    Json::obj(vec![
+        (
+            "matrix",
+            Json::obj(vec![
+                ("family", Json::Str("powerlaw".into())),
+                ("reorder", Json::Str("degree_desc".into())),
+                ("rows", Json::Num(m.rows as f64)),
+                ("cols", Json::Num(m.cols as f64)),
+                ("nnz", Json::Num(m.nnz() as f64)),
+            ]),
+        ),
+        ("dense_dim", Json::Num(n as f64)),
+        ("threads", Json::Num(threads as f64)),
+        (
+            "spmm",
+            Json::obj(vec![
+                ("seed_rowsplit_8t_ms", Json::Num(r_seed.mean_s * 1e3)),
+                ("nnz_balanced_8t_ms", Json::Num(r_new.mean_s * 1e3)),
+                ("nnz_balanced_1t_ms", Json::Num(r_one.mean_s * 1e3)),
+                ("speedup_vs_seed", Json::Num(spmm_speedup)),
+            ]),
+        ),
+        (
+            "sddmm",
+            Json::obj(vec![
+                ("single_thread_ms", Json::Num(r_sd_one.mean_s * 1e3)),
+                ("parallel_8t_ms", Json::Num(r_sd_par.mean_s * 1e3)),
+                ("speedup_vs_single", Json::Num(sddmm_speedup)),
+            ]),
+        ),
+    ])
+}
+
+fn model_benches(rt: Arc<Runtime>) {
+    let mut d = ModelDriver::init(rt, "cognate", 0).unwrap();
     let mut rng = Rng::new(7);
     let b = d.train_b();
     let mk = |n: usize, rng: &mut Rng| (0..n).map(|_| rng.next_f32()).collect::<Vec<_>>();
@@ -40,4 +196,28 @@ fn main() {
         let _ = d.score_configs(&s, &cfgs, &zs).unwrap();
     })
     .report();
+}
+
+fn main() {
+    let kernels = kernel_ab();
+    let out = std::env::var("BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| repo_root().join("BENCH_kernels.json"));
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_perf_ab".into())),
+        ("kernels", kernels),
+    ]);
+    std::fs::write(&out, doc.to_string_pretty()).expect("writing BENCH_kernels.json");
+    println!("wrote {out:?}");
+
+    let dir = artifacts_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("artifacts: {dir:?}");
+            model_benches(Arc::new(rt));
+        }
+        Err(e) => {
+            println!("skipping model benches (no AOT artifacts at {dir:?}: {e})");
+        }
+    }
 }

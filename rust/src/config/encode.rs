@@ -191,7 +191,7 @@ mod tests {
     fn distinct_configs_distinct_vectors() {
         let space = spade_space();
         let mut seen = std::collections::HashSet::new();
-        for c in &space {
+        for c in space {
             let m = mapped_vector(&Config::Spade(*c), 4096);
             let h = het_vector(&Config::Spade(*c));
             let key: Vec<u32> = m.iter().chain(h.iter()).map(|f| f.to_bits()).collect();

@@ -235,7 +235,7 @@ mod tests {
     #[test]
     fn all_mapped_orders_are_permutations() {
         for c in spade_space() {
-            assert!(is_perm(&phi_spade(&c, 2048).order));
+            assert!(is_perm(&phi_spade(c, 2048).order));
         }
     }
 

@@ -9,8 +9,11 @@ pub mod space;
 pub use encode::{fa_vector, fm_vector, het_vector, mapped_vector, FA_DIM, HET_DIM, MAPPED_DIM};
 pub use mapping::{phi_spade, pi_cpu, pi_gpu, MappedConfig, Slot, NUM_SLOTS};
 pub use space::{
-    cpu_space, default_config_index, gpu_space, spade_space, Config, CpuConfig, CpuOrder,
-    GpuBinding, GpuConfig, PlatformId, SpadeConfig, ALL_CPU_ORDERS, ALL_GPU_BINDINGS,
-    CPU_I_SPLITS, CPU_J_SPLITS, CPU_K_SPLITS, GPU_I_SPLITS, GPU_K1_SPLITS, GPU_K2_SPLITS,
-    GPU_UNROLLS, SPADE_COL_PANELS, SPADE_ROW_PANELS, SPADE_SPLITS,
+    config_at, cpu_config_at, cpu_index_of, cpu_space, default_config_index, gpu_config_at,
+    gpu_index_of, gpu_space, index_of, knob_digit, knob_stride, radices, space_len,
+    spade_config_at, spade_index_of, spade_space, Config, CpuConfig, CpuOrder, GpuBinding,
+    GpuConfig, PlatformId, SpadeConfig, ALL_CPU_ORDERS, ALL_GPU_BINDINGS, CPU_I_SPLITS,
+    CPU_J_SPLITS, CPU_K_SPLITS, CPU_RADICES, CPU_SPACE_LEN, GPU_I_SPLITS, GPU_K1_SPLITS,
+    GPU_K2_SPLITS, GPU_RADICES, GPU_SPACE_LEN, GPU_UNROLLS, SPADE_COL_PANELS, SPADE_RADICES,
+    SPADE_ROW_PANELS, SPADE_SPACE_LEN, SPADE_SPLITS,
 };

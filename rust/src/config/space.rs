@@ -9,8 +9,16 @@
 //!   {32,256} × 2 × 2 × 2.
 //! * **GPU (SparseTIR)** — strip-mining, loop binding, loop unrolling,
 //!   vectorization. 288 configs ("approximately 300", §4.1).
+//!
+//! Each space is a dense mixed-radix enumeration: a config index is the
+//! knob digits read outermost-first (the same nesting order as the
+//! `build_*_space` loops), so `index_of`/`config_at` convert between a
+//! `Config` and its index with pure arithmetic — no table scans. The
+//! enumerated `Vec`s themselves are built once per process behind
+//! `OnceLock`s and handed out as `&'static` slices.
 
-use crate::sparse::reorder::Reorder;
+use crate::sparse::reorder::{Reorder, ALL_REORDERS};
+use std::sync::OnceLock;
 
 // ---------------------------------------------------------------------------
 // CPU (TACO)
@@ -51,8 +59,9 @@ pub const ALL_CPU_ORDERS: [CpuOrder; 8] = [
 ];
 
 impl CpuOrder {
+    /// Position in `ALL_CPU_ORDERS` (declaration order == array order).
     pub fn index(&self) -> usize {
-        ALL_CPU_ORDERS.iter().position(|o| o == self).unwrap()
+        *self as usize
     }
 }
 
@@ -127,8 +136,9 @@ pub const ALL_GPU_BINDINGS: [GpuBinding; 4] = [
 ];
 
 impl GpuBinding {
+    /// Position in `ALL_GPU_BINDINGS` (declaration order == array order).
     pub fn index(&self) -> usize {
-        ALL_GPU_BINDINGS.iter().position(|b| b == self).unwrap()
+        *self as usize
     }
 }
 
@@ -190,14 +200,197 @@ impl PlatformId {
     }
 }
 
-/// Enumerate the full CPU space (1,024 configs), index-stable.
-pub fn cpu_space() -> Vec<CpuConfig> {
-    let mut v = Vec::with_capacity(1024);
+// ---------------------------------------------------------------------------
+// Mixed-radix index encoding
+// ---------------------------------------------------------------------------
+
+/// Knob radices, outermost (most-significant digit) first. The order
+/// mirrors the `build_*_space` loop nests, so digit `d` of an index is
+/// knob `d` of the enumeration.
+pub const CPU_RADICES: [usize; 5] = [4, 4, 2, 8, 4]; // i, j, k, order, format
+pub const SPADE_RADICES: [usize; 6] = [4, 4, 2, 2, 2, 2]; // row, col, split, bar, byp, reord
+pub const GPU_RADICES: [usize; 6] = [3, 2, 2, 4, 3, 2]; // i, k1, k2, bind, unroll, vec
+
+pub const CPU_SPACE_LEN: usize = 1024;
+pub const SPADE_SPACE_LEN: usize = 256;
+pub const GPU_SPACE_LEN: usize = 288;
+
+/// Knob radices of a platform's space, outermost digit first.
+pub fn radices(p: PlatformId) -> &'static [usize] {
+    match p {
+        PlatformId::Cpu => &CPU_RADICES,
+        PlatformId::Spade => &SPADE_RADICES,
+        PlatformId::Gpu => &GPU_RADICES,
+    }
+}
+
+/// Total number of configs in a platform's space (no enumeration).
+pub fn space_len(p: PlatformId) -> usize {
+    match p {
+        PlatformId::Cpu => CPU_SPACE_LEN,
+        PlatformId::Spade => SPADE_SPACE_LEN,
+        PlatformId::Gpu => GPU_SPACE_LEN,
+    }
+}
+
+/// Place value (index stride) of knob `dim`: the product of all radices
+/// inner to it. `O(#knobs)`, independent of the space size.
+#[inline]
+pub fn knob_stride(p: PlatformId, dim: usize) -> usize {
+    radices(p)[dim + 1..].iter().product()
+}
+
+/// Digit `dim` of `idx` in the platform's mixed-radix encoding.
+#[inline]
+pub fn knob_digit(p: PlatformId, idx: usize, dim: usize) -> usize {
+    (idx / knob_stride(p, dim)) % radices(p)[dim]
+}
+
+/// Position of a knob *value* in its (tiny, constant-size) value array.
+#[inline]
+fn pos(arr: &[usize], v: usize) -> usize {
+    let mut i = 0;
+    while i < arr.len() {
+        if arr[i] == v {
+            return i;
+        }
+        i += 1;
+    }
+    panic!("knob value {v} not in the config space");
+}
+
+/// Index of a CPU config — pure mixed-radix arithmetic, no scan.
+pub fn cpu_index_of(c: &CpuConfig) -> usize {
+    let i = pos(&CPU_I_SPLITS, c.i_split);
+    let j = pos(&CPU_J_SPLITS, c.j_split);
+    let k = pos(&CPU_K_SPLITS, c.k_split);
+    (((i * CPU_RADICES[1] + j) * CPU_RADICES[2] + k) * CPU_RADICES[3] + c.order.index())
+        * CPU_RADICES[4]
+        + c.format.index()
+}
+
+/// Index of a SPADE config — pure mixed-radix arithmetic, no scan.
+pub fn spade_index_of(c: &SpadeConfig) -> usize {
+    let r = pos(&SPADE_ROW_PANELS, c.row_panels);
+    let cp = pos(&SPADE_COL_PANELS, c.col_panels);
+    let s = pos(&SPADE_SPLITS, c.split);
+    ((((r * SPADE_RADICES[1] + cp) * SPADE_RADICES[2] + s) * SPADE_RADICES[3]
+        + c.barrier as usize)
+        * SPADE_RADICES[4]
+        + c.bypass as usize)
+        * SPADE_RADICES[5]
+        + c.reorder as usize
+}
+
+/// Index of a GPU config — pure mixed-radix arithmetic, no scan.
+pub fn gpu_index_of(c: &GpuConfig) -> usize {
+    let i = pos(&GPU_I_SPLITS, c.i_split);
+    let k1 = pos(&GPU_K1_SPLITS, c.k1);
+    let k2 = pos(&GPU_K2_SPLITS, c.k2);
+    let u = pos(&GPU_UNROLLS, c.unroll);
+    ((((i * GPU_RADICES[1] + k1) * GPU_RADICES[2] + k2) * GPU_RADICES[3]
+        + c.binding.index())
+        * GPU_RADICES[4]
+        + u)
+        * GPU_RADICES[5]
+        + c.vectorize as usize
+}
+
+/// Index of any config in its platform's enumeration.
+pub fn index_of(c: &Config) -> usize {
+    match c {
+        Config::Cpu(c) => cpu_index_of(c),
+        Config::Spade(c) => spade_index_of(c),
+        Config::Gpu(c) => gpu_index_of(c),
+    }
+}
+
+/// Decode an index into a CPU config (inverse of `cpu_index_of`).
+pub fn cpu_config_at(idx: usize) -> CpuConfig {
+    debug_assert!(idx < CPU_SPACE_LEN);
+    let f = idx % CPU_RADICES[4];
+    let idx = idx / CPU_RADICES[4];
+    let o = idx % CPU_RADICES[3];
+    let idx = idx / CPU_RADICES[3];
+    let k = idx % CPU_RADICES[2];
+    let idx = idx / CPU_RADICES[2];
+    let j = idx % CPU_RADICES[1];
+    let i = idx / CPU_RADICES[1];
+    CpuConfig {
+        i_split: CPU_I_SPLITS[i],
+        j_split: CPU_J_SPLITS[j],
+        k_split: CPU_K_SPLITS[k],
+        order: ALL_CPU_ORDERS[o],
+        format: ALL_REORDERS[f],
+    }
+}
+
+/// Decode an index into a SPADE config (inverse of `spade_index_of`).
+pub fn spade_config_at(idx: usize) -> SpadeConfig {
+    debug_assert!(idx < SPADE_SPACE_LEN);
+    let reorder = idx % 2 == 1;
+    let idx = idx / 2;
+    let bypass = idx % 2 == 1;
+    let idx = idx / 2;
+    let barrier = idx % 2 == 1;
+    let idx = idx / 2;
+    let s = idx % SPADE_RADICES[2];
+    let idx = idx / SPADE_RADICES[2];
+    let cp = idx % SPADE_RADICES[1];
+    let r = idx / SPADE_RADICES[1];
+    SpadeConfig {
+        row_panels: SPADE_ROW_PANELS[r],
+        col_panels: SPADE_COL_PANELS[cp],
+        split: SPADE_SPLITS[s],
+        barrier,
+        bypass,
+        reorder,
+    }
+}
+
+/// Decode an index into a GPU config (inverse of `gpu_index_of`).
+pub fn gpu_config_at(idx: usize) -> GpuConfig {
+    debug_assert!(idx < GPU_SPACE_LEN);
+    let vectorize = idx % 2 == 1;
+    let idx = idx / 2;
+    let u = idx % GPU_RADICES[4];
+    let idx = idx / GPU_RADICES[4];
+    let b = idx % GPU_RADICES[3];
+    let idx = idx / GPU_RADICES[3];
+    let k2 = idx % GPU_RADICES[2];
+    let idx = idx / GPU_RADICES[2];
+    let k1 = idx % GPU_RADICES[1];
+    let i = idx / GPU_RADICES[1];
+    GpuConfig {
+        i_split: GPU_I_SPLITS[i],
+        k1: GPU_K1_SPLITS[k1],
+        k2: GPU_K2_SPLITS[k2],
+        binding: ALL_GPU_BINDINGS[b],
+        unroll: GPU_UNROLLS[u],
+        vectorize,
+    }
+}
+
+/// Decode an index on any platform.
+pub fn config_at(p: PlatformId, idx: usize) -> Config {
+    match p {
+        PlatformId::Cpu => Config::Cpu(cpu_config_at(idx)),
+        PlatformId::Spade => Config::Spade(spade_config_at(idx)),
+        PlatformId::Gpu => Config::Gpu(gpu_config_at(idx)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Memoized enumerations
+// ---------------------------------------------------------------------------
+
+fn build_cpu_space() -> Vec<CpuConfig> {
+    let mut v = Vec::with_capacity(CPU_SPACE_LEN);
     for &i_split in &CPU_I_SPLITS {
         for &j_split in &CPU_J_SPLITS {
             for &k_split in &CPU_K_SPLITS {
                 for &order in &ALL_CPU_ORDERS {
-                    for &format in &crate::sparse::reorder::ALL_REORDERS {
+                    for &format in &ALL_REORDERS {
                         v.push(CpuConfig { i_split, j_split, k_split, order, format });
                     }
                 }
@@ -207,9 +400,8 @@ pub fn cpu_space() -> Vec<CpuConfig> {
     v
 }
 
-/// Enumerate the SPADE space (exactly 256 configs), index-stable.
-pub fn spade_space() -> Vec<SpadeConfig> {
-    let mut v = Vec::with_capacity(256);
+fn build_spade_space() -> Vec<SpadeConfig> {
+    let mut v = Vec::with_capacity(SPADE_SPACE_LEN);
     for &row_panels in &SPADE_ROW_PANELS {
         for &col_panels in &SPADE_COL_PANELS {
             for &split in &SPADE_SPLITS {
@@ -233,9 +425,8 @@ pub fn spade_space() -> Vec<SpadeConfig> {
     v
 }
 
-/// Enumerate the GPU space (288 configs), index-stable.
-pub fn gpu_space() -> Vec<GpuConfig> {
-    let mut v = Vec::with_capacity(288);
+fn build_gpu_space() -> Vec<GpuConfig> {
+    let mut v = Vec::with_capacity(GPU_SPACE_LEN);
     for &i_split in &GPU_I_SPLITS {
         for &k1 in &GPU_K1_SPLITS {
             for &k2 in &GPU_K2_SPLITS {
@@ -252,51 +443,54 @@ pub fn gpu_space() -> Vec<GpuConfig> {
     v
 }
 
+/// The full CPU space (1,024 configs), index-stable, built once per
+/// process.
+pub fn cpu_space() -> &'static [CpuConfig] {
+    static SPACE: OnceLock<Vec<CpuConfig>> = OnceLock::new();
+    SPACE.get_or_init(build_cpu_space).as_slice()
+}
+
+/// The SPADE space (exactly 256 configs), index-stable, built once per
+/// process.
+pub fn spade_space() -> &'static [SpadeConfig] {
+    static SPACE: OnceLock<Vec<SpadeConfig>> = OnceLock::new();
+    SPACE.get_or_init(build_spade_space).as_slice()
+}
+
+/// The GPU space (288 configs), index-stable, built once per process.
+pub fn gpu_space() -> &'static [GpuConfig] {
+    static SPACE: OnceLock<Vec<GpuConfig>> = OnceLock::new();
+    SPACE.get_or_init(build_gpu_space).as_slice()
+}
+
 /// Index of each platform's *default* configuration — the programming
 /// system's out-of-the-box schedule, used as the speedup baseline.
+/// Computed arithmetically; no space scan.
 pub fn default_config_index(p: PlatformId) -> usize {
     match p {
-        PlatformId::Cpu => {
-            let space = cpu_space();
-            space
-                .iter()
-                .position(|c| {
-                    c.i_split == 256
-                        && c.j_split == 1024
-                        && c.k_split == 32
-                        && c.order == CpuOrder::RowMajor
-                        && c.format == Reorder::None
-                })
-                .unwrap()
-        }
-        PlatformId::Spade => {
-            let space = spade_space();
-            space
-                .iter()
-                .position(|c| {
-                    c.row_panels == 256
-                        && c.col_panels == 0
-                        && c.split == 32
-                        && !c.barrier
-                        && !c.bypass
-                        && !c.reorder
-                })
-                .unwrap()
-        }
-        PlatformId::Gpu => {
-            let space = gpu_space();
-            space
-                .iter()
-                .position(|c| {
-                    c.i_split == 64
-                        && c.k1 == 32
-                        && c.k2 == 2
-                        && c.binding == GpuBinding::RowPerThread
-                        && c.unroll == 1
-                        && !c.vectorize
-                })
-                .unwrap()
-        }
+        PlatformId::Cpu => cpu_index_of(&CpuConfig {
+            i_split: 256,
+            j_split: 1024,
+            k_split: 32,
+            order: CpuOrder::RowMajor,
+            format: Reorder::None,
+        }),
+        PlatformId::Spade => spade_index_of(&SpadeConfig {
+            row_panels: 256,
+            col_panels: 0,
+            split: 32,
+            barrier: false,
+            bypass: false,
+            reorder: false,
+        }),
+        PlatformId::Gpu => gpu_index_of(&GpuConfig {
+            i_split: 64,
+            k1: 32,
+            k2: 2,
+            binding: GpuBinding::RowPerThread,
+            unroll: 1,
+            vectorize: false,
+        }),
     }
 }
 
@@ -310,7 +504,7 @@ mod tests {
         assert_eq!(s.len(), 256);
         // All unique.
         let mut set = std::collections::HashSet::new();
-        for c in &s {
+        for c in s {
             assert!(set.insert(*c));
         }
     }
@@ -382,5 +576,118 @@ mod tests {
                 reorder: true
             }
         );
+    }
+
+    #[test]
+    fn spaces_are_memoized() {
+        // OnceLock: repeated calls return the same allocation.
+        assert!(std::ptr::eq(cpu_space(), cpu_space()));
+        assert!(std::ptr::eq(spade_space(), spade_space()));
+        assert!(std::ptr::eq(gpu_space(), gpu_space()));
+    }
+
+    #[test]
+    fn radices_consistent_with_lens() {
+        for p in [PlatformId::Cpu, PlatformId::Spade, PlatformId::Gpu] {
+            let prod: usize = radices(p).iter().product();
+            assert_eq!(prod, space_len(p));
+            let enumerated = match p {
+                PlatformId::Cpu => cpu_space().len(),
+                PlatformId::Spade => spade_space().len(),
+                PlatformId::Gpu => gpu_space().len(),
+            };
+            assert_eq!(enumerated, space_len(p));
+        }
+    }
+
+    #[test]
+    fn index_roundtrip_full_space() {
+        // index_of(config_at(i)) == i and config_at matches the
+        // enumerated space at every index, on every platform.
+        for p in [PlatformId::Cpu, PlatformId::Spade, PlatformId::Gpu] {
+            for i in 0..space_len(p) {
+                let c = config_at(p, i);
+                assert_eq!(index_of(&c), i, "platform {} idx {i}", p.name());
+            }
+        }
+        for (i, c) in cpu_space().iter().enumerate() {
+            assert_eq!(cpu_config_at(i), *c);
+            assert_eq!(cpu_index_of(c), i);
+        }
+        for (i, c) in spade_space().iter().enumerate() {
+            assert_eq!(spade_config_at(i), *c);
+            assert_eq!(spade_index_of(c), i);
+        }
+        for (i, c) in gpu_space().iter().enumerate() {
+            assert_eq!(gpu_config_at(i), *c);
+            assert_eq!(gpu_index_of(c), i);
+        }
+    }
+
+    #[test]
+    fn default_index_matches_enumeration() {
+        // The arithmetic default must agree with a linear scan of the
+        // enumerated space (the seed implementation's behaviour).
+        let cd = default_config_index(PlatformId::Cpu);
+        assert_eq!(
+            cpu_space()[cd],
+            CpuConfig {
+                i_split: 256,
+                j_split: 1024,
+                k_split: 32,
+                order: CpuOrder::RowMajor,
+                format: Reorder::None,
+            }
+        );
+        let sd = default_config_index(PlatformId::Spade);
+        assert_eq!(
+            spade_space()[sd],
+            SpadeConfig {
+                row_panels: 256,
+                col_panels: 0,
+                split: 32,
+                barrier: false,
+                bypass: false,
+                reorder: false,
+            }
+        );
+        let gd = default_config_index(PlatformId::Gpu);
+        assert_eq!(
+            gpu_space()[gd],
+            GpuConfig {
+                i_split: 64,
+                k1: 32,
+                k2: 2,
+                binding: GpuBinding::RowPerThread,
+                unroll: 1,
+                vectorize: false,
+            }
+        );
+    }
+
+    #[test]
+    fn enum_discriminants_match_arrays() {
+        // `index()` relies on declaration order == array order.
+        for (i, o) in ALL_CPU_ORDERS.iter().enumerate() {
+            assert_eq!(o.index(), i);
+        }
+        for (i, b) in ALL_GPU_BINDINGS.iter().enumerate() {
+            assert_eq!(b.index(), i);
+        }
+    }
+
+    #[test]
+    fn knob_digit_and_stride() {
+        // Innermost knob has stride 1; outermost stride == len / radix.
+        for p in [PlatformId::Cpu, PlatformId::Spade, PlatformId::Gpu] {
+            let r = radices(p);
+            assert_eq!(knob_stride(p, r.len() - 1), 1);
+            assert_eq!(knob_stride(p, 0), space_len(p) / r[0]);
+            // Reassembling digits reproduces the index.
+            let idx = space_len(p) - 1;
+            let rebuilt: usize =
+                (0..r.len()).map(|d| knob_digit(p, idx, d) * knob_stride(p, d)).sum();
+            assert_eq!(rebuilt, idx);
+        }
     }
 }

@@ -19,7 +19,7 @@ use std::sync::Arc;
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "table1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "table2", "fig13", "fig14", "fig15",
+    "table2", "fig13", "fig14", "fig15", "kernels",
 ];
 
 /// Lazily-built shared state: datasets, AEs and pre-trained models are
@@ -134,6 +134,7 @@ pub fn run_with(wb: &mut Workbench, which: &str) -> Result<Vec<Table>> {
         "fig13" => per_matrix(wb, Op::Spmm, 5, "fig13")?,
         "fig14" => per_matrix(wb, Op::Sddmm, 1, "fig14")?,
         "fig15" => per_matrix(wb, Op::Sddmm, 5, "fig15")?,
+        "kernels" => kernels_diag(wb)?,
         other => bail!("unknown experiment {other:?} (try: {})", ALL_EXPERIMENTS.join(", ")),
     };
     let dir = wb.pipe.results_dir.clone();
@@ -590,6 +591,61 @@ pub fn correlation_diagnostic(pipe: &mut Pipeline, op: Op) -> Result<Table> {
         t.row(vec![rc.name.clone(), Table::f(rho)]);
     }
     Ok(t)
+}
+
+/// `kernels` — parallel sparse-kernel scaling diagnostic (not a paper
+/// figure; excluded from `run_all`). Times the nnz-balanced
+/// `spmm_parallel` / `sddmm_parallel` on the heaviest collection
+/// matrices at 1 vs `scale.threads` threads. Dataset collection and the
+/// simulators ride on the same thread pool and partitioning, so this
+/// table is the quick health check that the hot path actually scales.
+fn kernels_diag(wb: &mut Workbench) -> Result<Vec<Table>> {
+    use crate::kernels::{sddmm_parallel, spmm_parallel, SddmmSchedule, SpmmSchedule, DENSE_DIM};
+    use crate::util::bench::bench;
+    use crate::util::rng::Rng;
+
+    let threads = wb.pipe.scale.threads.max(1);
+    let coll = wb.pipe.collection();
+    let mut by_nnz: Vec<usize> = (0..coll.len()).collect();
+    by_nnz.sort_by_key(|&i| std::cmp::Reverse(coll[i].matrix.nnz()));
+
+    let n = DENSE_DIM;
+    let mut t = Table::new(
+        "kernels: parallel kernel scaling on heaviest collection matrices",
+        &["op", "matrix", "nnz", "threads", "mean_ms", "speedup"],
+    );
+    let mut rng = Rng::new(0xBE5C);
+    let thread_counts: Vec<usize> = if threads > 1 { vec![1, threads] } else { vec![1] };
+    for &mi in by_nnz.iter().take(3) {
+        let info = &coll[mi];
+        let m = &info.matrix;
+        let b: Vec<f32> = (0..m.cols * n).map(|_| rng.next_f32() - 0.5).collect();
+        let bt: Vec<f32> = (0..m.rows * n).map(|_| rng.next_f32() - 0.5).collect();
+        let c: Vec<f32> = (0..n * m.cols).map(|_| rng.next_f32() - 0.5).collect();
+        let ss = SpmmSchedule { i_block: 64, k_block: 32, outer_k: false };
+        let sd = SddmmSchedule { i_block: 64, k_block: 32, outer_k: false };
+        let mut out = vec![0f32; m.rows * n];
+        let mut vals = vec![0f32; m.nnz()];
+        let mut base = [0f64; 2];
+        for &th in &thread_counts {
+            let rs = bench("spmm", 1, 8, 0.5, || spmm_parallel(m, &b, n, ss, th, &mut out));
+            let rd = bench("sddmm", 1, 8, 0.5, || sddmm_parallel(m, &bt, &c, n, sd, th, &mut vals));
+            if th == 1 {
+                base = [rs.mean_s, rd.mean_s];
+            }
+            for (op, r, b0) in [("spmm", &rs, base[0]), ("sddmm", &rd, base[1])] {
+                t.row(vec![
+                    op.into(),
+                    info.name.clone(),
+                    m.nnz().to_string(),
+                    th.to_string(),
+                    Table::f(r.mean_s * 1e3),
+                    Table::f(b0 / r.mean_s.max(1e-12)),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
 }
 
 /// Convenience: run every experiment with one shared workbench, most

@@ -59,13 +59,22 @@ pub struct Dataset {
 impl Dataset {
     /// Collect a dataset by running the platform cost model over every
     /// matrix in parallel.
+    ///
+    /// Matrices are dispatched heaviest-first (LPT scheduling by nnz):
+    /// with the pool's atomic-cursor work claiming, starting the big
+    /// matrices early keeps the tail of the run from serializing behind
+    /// one late-claimed giant. Results are scattered back so record
+    /// order still matches `matrices`.
     pub fn collect(
         platform: &dyn CostModel,
         op: Op,
         matrices: &[MatrixInfo],
         threads: usize,
     ) -> Dataset {
-        let records = par_map(matrices, threads, |_, info| {
+        let mut order: Vec<usize> = (0..matrices.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(matrices[i].matrix.nnz()));
+        let collected = par_map(&order, threads, |_, &mi| {
+            let info = &matrices[mi];
             let costs = platform.eval_all(&info.matrix, op);
             MatrixRecord {
                 name: info.name.clone(),
@@ -76,6 +85,11 @@ impl Dataset {
                 costs,
             }
         });
+        let mut slots: Vec<Option<MatrixRecord>> = (0..matrices.len()).map(|_| None).collect();
+        for (&mi, rec) in order.iter().zip(collected) {
+            slots[mi] = Some(rec);
+        }
+        let records = slots.into_iter().map(|s| s.expect("record collected")).collect();
         Dataset { platform: platform.id(), op, records }
     }
 
@@ -244,6 +258,18 @@ mod tests {
             assert_eq!(a.dmap, b.dmap);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn collect_preserves_input_order_despite_lpt() {
+        // Dispatch is heaviest-first, but records must land in input
+        // order (dataset files and split indices depend on it).
+        let coll = tiny_collection();
+        let ds = Dataset::collect(&SpadeSim::new(), Op::Spmm, &coll, 3);
+        for (info, rec) in coll.iter().zip(&ds.records) {
+            assert_eq!(info.name, rec.name);
+            assert_eq!(info.matrix.nnz(), rec.nnz);
+        }
     }
 
     #[test]

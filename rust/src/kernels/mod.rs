@@ -2,12 +2,65 @@
 //! configurable schedules, tested against naive oracles. These anchor
 //! the analytical platform cost models and power the GNN end-to-end
 //! example.
+//!
+//! # Schedule semantics
+//!
+//! Both kernels take a schedule mirroring the CPU config space: the row
+//! loop is strip-mined by `i_block`, the dense-column (SpMM) or
+//! reduction (SDDMM) loop by `k_block`, and `outer_k` hoists the
+//! k-strip loop outside the row loop (the `[k2, i2, …]` orders of
+//! §3.2). Every variant — scheduled, and parallel at any thread count —
+//! honors the schedule and preserves a fixed per-element accumulation
+//! order: SpMM accumulates each output element over the sparse column
+//! index `j` ascending; SDDMM reduces over `k` with a shared 4-wide
+//! unrolled dot kernel whose partial sums combine in a fixed order. The
+//! parallel kernels are therefore bitwise identical across thread
+//! counts (and, for SpMM, across schedules too).
+//!
+//! # nnz-balanced partitioning
+//!
+//! Parallel kernels split rows by *nonzero count*, not row count:
+//! `nnz_balanced_partition` binary-searches the CSR `indptr` prefix
+//! sums so each thread gets ≈ nnz/threads of the actual work. On
+//! power-law matrices (a few very dense rows, a long sparse tail) the
+//! seed's equal-row-count split left most threads idle behind the one
+//! that drew the dense rows.
 
 pub mod sddmm;
 pub mod spmm;
 
-pub use sddmm::{sddmm_ref, sddmm_scheduled, SddmmSchedule};
+pub use sddmm::{sddmm_parallel, sddmm_ref, sddmm_scheduled, SddmmSchedule};
 pub use spmm::{spmm_parallel, spmm_ref, spmm_scheduled, SpmmSchedule};
+
+/// Row boundaries splitting a CSR matrix into `parts` contiguous row
+/// ranges of approximately equal nonzero count.
+///
+/// `indptr` is the CSR row-pointer array (`indptr[i]` = nnz before row
+/// `i`, already a prefix sum); the result has `parts + 1` entries with
+/// `bounds[0] == 0` and `bounds[parts] == rows`, and range `t` is
+/// `bounds[t]..bounds[t+1]`. Assignment is greedy: each part takes rows
+/// until it holds its share of the *remaining* nonzeros, found by a
+/// binary search (`partition_point`) over the prefix sums — so a single
+/// very dense row absorbs one part without dragging the light tail
+/// along (the failure mode of fixed-quantile targets). O(parts · log
+/// rows); ranges may be empty when one row exceeds the per-part share.
+pub fn nnz_balanced_partition(indptr: &[usize], parts: usize) -> Vec<usize> {
+    let rows = indptr.len().saturating_sub(1);
+    let parts = parts.max(1);
+    let total = indptr.last().copied().unwrap_or(0);
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0usize);
+    let mut row = 0usize;
+    for t in 0..parts - 1 {
+        let remaining = total - indptr[row.min(rows)];
+        let share = remaining.div_ceil(parts - t);
+        let target = indptr[row.min(rows)] + share;
+        row = indptr.partition_point(|&x| x < target).min(rows).max(row);
+        bounds.push(row);
+    }
+    bounds.push(rows);
+    bounds
+}
 
 /// Which sparse primitive a config / dataset / model targets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -37,3 +90,58 @@ pub const ALL_OPS: [Op; 2] = [Op::Spmm, Op::Sddmm];
 /// Dense feature width N (SpMM) / K (SDDMM) used throughout evaluation —
 /// the paper's GNN-style setting uses a few hundred; we default to 128.
 pub const DENSE_DIM: usize = 128;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_all_rows_monotone() {
+        // indptr for rows with nnz [3, 0, 5, 1, 7, 0, 2, 2].
+        let indptr = [0usize, 3, 3, 8, 9, 16, 16, 18, 20];
+        for parts in 1..=10 {
+            let b = nnz_balanced_partition(&indptr, parts);
+            assert_eq!(b.len(), parts + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), 8);
+            for w in b.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_balances_skewed_nnz() {
+        // One dense row among many light rows: the dense row must not
+        // drag its whole equal-row-count half along with it.
+        let mut indptr = vec![0usize];
+        let mut total = 0;
+        for i in 0..100 {
+            total += if i == 0 { 1000 } else { 1 };
+            indptr.push(total);
+        }
+        let b = nnz_balanced_partition(&indptr, 4);
+        // Part 0 should hold just the dense row (1000 of 1099 nnz).
+        assert!(b[1] <= 2, "bounds {b:?}");
+        let nnz_of = |t: usize| indptr[b[t + 1]] - indptr[b[t]];
+        // Remaining parts split the light tail about evenly.
+        for t in 1..4 {
+            assert!(nnz_of(t) <= 60, "part {t} got {} nnz: {b:?}", nnz_of(t));
+        }
+    }
+
+    #[test]
+    fn partition_empty_and_degenerate() {
+        assert_eq!(nnz_balanced_partition(&[0], 4), vec![0, 0, 0, 0, 0]);
+        assert_eq!(nnz_balanced_partition(&[0, 0, 0], 2), vec![0, 0, 2]);
+        assert_eq!(nnz_balanced_partition(&[0, 5], 3), vec![0, 1, 1, 1]);
+        assert_eq!(nnz_balanced_partition(&[0, 2, 4], 1), vec![0, 2]);
+    }
+
+    #[test]
+    fn partition_even_nnz_splits_evenly() {
+        // 8 rows × 4 nnz each, 4 parts → 2 rows per part.
+        let indptr: Vec<usize> = (0..=8).map(|i| i * 4).collect();
+        assert_eq!(nnz_balanced_partition(&indptr, 4), vec![0, 2, 4, 6, 8]);
+    }
+}

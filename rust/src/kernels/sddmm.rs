@@ -2,8 +2,14 @@
 //! B: M×K dense, C: K×N dense, D sparse with A's pattern).
 //!
 //! As with SpMM, one computation under several schedules, all tested
-//! against the naive oracle.
+//! against the naive oracle. All scheduled and parallel paths share one
+//! 4-wide unrolled dot kernel (`sddmm_dot`) whose partial accumulators
+//! combine in a fixed order, so for a given schedule the output is
+//! bitwise identical at every thread count (and tolerance-close to the
+//! sequentially-accumulating oracle). `sddmm_parallel` splits rows by
+//! nonzero count via `kernels::nnz_balanced_partition`.
 
+use super::nnz_balanced_partition;
 use crate::sparse::Csr;
 
 /// Loop schedule for SDDMM: the reduction over `k` (the shared dense
@@ -42,41 +48,70 @@ pub fn sddmm_ref(a: &Csr, b: &[f32], c: &[f32], k: usize, out: &mut [f32]) {
     }
 }
 
-/// Scheduled SDDMM; numerics match the oracle (same accumulation order
-/// within each k-strip; strips summed in ascending order).
-pub fn sddmm_scheduled(a: &Csr, b: &[f32], c: &[f32], k: usize, s: SddmmSchedule, out: &mut [f32]) {
+/// Strided dot product `Σ brow[kk] · C[kk, j]` over `kk ∈ k0..k1`,
+/// 4-wide partial accumulators summed in a fixed order
+/// `(a0 + a1) + (a2 + a3)` then the scalar remainder. Shared by every
+/// scheduled/parallel path, which is what makes them mutually bitwise
+/// identical.
+#[inline]
+fn sddmm_dot(brow: &[f32], c: &[f32], n: usize, j: usize, k0: usize, k1: usize) -> f32 {
+    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+    let mut kk = k0;
+    while kk + 4 <= k1 {
+        a0 += brow[kk] * c[kk * n + j];
+        a1 += brow[kk + 1] * c[(kk + 1) * n + j];
+        a2 += brow[kk + 2] * c[(kk + 2) * n + j];
+        a3 += brow[kk + 3] * c[(kk + 3) * n + j];
+        kk += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    while kk < k1 {
+        acc += brow[kk] * c[kk * n + j];
+        kk += 1;
+    }
+    acc
+}
+
+/// Scheduled SDDMM over the row range `r0..r1`; `out` covers exactly
+/// the nnz slots of those rows (`indptr[r1] - indptr[r0]` values). The
+/// shared core of the single-thread and parallel entry points.
+fn sddmm_rows_scheduled(
+    a: &Csr,
+    b: &[f32],
+    c: &[f32],
+    k: usize,
+    s: SddmmSchedule,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
     let n = a.cols;
-    assert_eq!(b.len(), a.rows * k);
-    assert_eq!(c.len(), k * n);
-    assert_eq!(out.len(), a.nnz());
+    let base = a.indptr[r0];
+    debug_assert_eq!(out.len(), a.indptr[r1] - base);
     let ib = s.i_block.max(1);
     let kb = s.k_block.max(1);
     if s.outer_k {
         out.fill(0.0);
         for k0 in (0..k).step_by(kb) {
             let k1 = (k0 + kb).min(k);
-            for i0 in (0..a.rows).step_by(ib) {
-                let i1 = (i0 + ib).min(a.rows);
+            for i0 in (r0..r1).step_by(ib) {
+                let i1 = (i0 + ib).min(r1);
                 for i in i0..i1 {
                     let brow = &b[i * k..(i + 1) * k];
                     let (start, end) = (a.indptr[i], a.indptr[i + 1]);
                     for (slot, &j) in (start..end).zip(a.row_indices(i)) {
-                        let mut acc = 0f32;
-                        for kk in k0..k1 {
-                            acc += brow[kk] * c[kk * n + j as usize];
-                        }
-                        out[slot] += acc;
+                        out[slot - base] += sddmm_dot(brow, c, n, j as usize, k0, k1);
                     }
                 }
             }
         }
         // Apply the sampling values in a final sweep.
-        for (o, &av) in out.iter_mut().zip(&a.values) {
+        for (o, &av) in out.iter_mut().zip(&a.values[base..a.indptr[r1]]) {
             *o *= av;
         }
     } else {
-        for i0 in (0..a.rows).step_by(ib) {
-            let i1 = (i0 + ib).min(a.rows);
+        for i0 in (r0..r1).step_by(ib) {
+            let i1 = (i0 + ib).min(r1);
             for i in i0..i1 {
                 let brow = &b[i * k..(i + 1) * k];
                 let (start, end) = (a.indptr[i], a.indptr[i + 1]);
@@ -86,17 +121,59 @@ pub fn sddmm_scheduled(a: &Csr, b: &[f32], c: &[f32], k: usize, s: SddmmSchedule
                     let mut acc = 0f32;
                     for k0 in (0..k).step_by(kb) {
                         let k1 = (k0 + kb).min(k);
-                        let mut part = 0f32;
-                        for kk in k0..k1 {
-                            part += brow[kk] * c[kk * n + j as usize];
-                        }
-                        acc += part;
+                        acc += sddmm_dot(brow, c, n, j as usize, k0, k1);
                     }
-                    out[slot] = av * acc;
+                    out[slot - base] = av * acc;
                 }
             }
         }
     }
+}
+
+/// Scheduled SDDMM; numerics match the oracle to tight tolerance (the
+/// 4-wide dot kernel reassociates the k-reduction).
+pub fn sddmm_scheduled(a: &Csr, b: &[f32], c: &[f32], k: usize, s: SddmmSchedule, out: &mut [f32]) {
+    assert_eq!(b.len(), a.rows * k, "B shape");
+    assert_eq!(c.len(), k * a.cols, "C shape");
+    assert_eq!(out.len(), a.nnz(), "D nnz");
+    sddmm_rows_scheduled(a, b, c, k, s, 0, a.rows, out);
+}
+
+/// Multi-threaded scheduled SDDMM over nnz-balanced row ranges.
+///
+/// Output slots are partitioned exactly along the row boundaries from
+/// `nnz_balanced_partition`, so threads write disjoint slices. For a
+/// given schedule the result is bitwise identical to `sddmm_scheduled`
+/// at every thread count.
+pub fn sddmm_parallel(
+    a: &Csr,
+    b: &[f32],
+    c: &[f32],
+    k: usize,
+    s: SddmmSchedule,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(b.len(), a.rows * k, "B shape");
+    assert_eq!(c.len(), k * a.cols, "C shape");
+    assert_eq!(out.len(), a.nnz(), "D nnz");
+    let threads = threads.max(1);
+    if threads == 1 || a.rows == 0 {
+        return sddmm_rows_scheduled(a, b, c, k, s, 0, a.rows, out);
+    }
+    let bounds = nnz_balanced_partition(&a.indptr, threads);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = out;
+        for w in bounds.windows(2) {
+            let (r0, r1) = (w[0], w[1]);
+            let (chunk, tail) =
+                std::mem::take(&mut rest).split_at_mut(a.indptr[r1] - a.indptr[r0]);
+            rest = tail;
+            if r1 > r0 {
+                scope.spawn(move || sddmm_rows_scheduled(a, b, c, k, s, r0, r1, chunk));
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -150,6 +227,40 @@ mod tests {
     }
 
     #[test]
+    fn parallel_matches_oracle() {
+        let a = generate(Family::PowerLaw, 220, 170, 0.03, 31);
+        let k = 40;
+        let b = dense(a.rows * k, 6);
+        let c = dense(k * a.cols, 7);
+        let mut expect = vec![0.0; a.nnz()];
+        sddmm_ref(&a, &b, &c, k, &mut expect);
+        for &ok in &[false, true] {
+            let s = SddmmSchedule { i_block: 9, k_block: 11, outer_k: ok };
+            for &t in &[1usize, 2, 5, 8] {
+                let mut got = vec![0.0; a.nnz()];
+                sddmm_parallel(&a, &b, &c, k, s, t, &mut got);
+                assert_close(&got, &expect, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_bitwise_deterministic_across_threads() {
+        let a = generate(Family::PowerLaw, 400, 300, 0.02, 13);
+        let k = 37;
+        let b = dense(a.rows * k, 8);
+        let c = dense(k * a.cols, 9);
+        let s = SddmmSchedule::default();
+        let mut base = vec![0.0; a.nnz()];
+        sddmm_parallel(&a, &b, &c, k, s, 1, &mut base);
+        for &t in &[2usize, 8] {
+            let mut got = vec![0.0; a.nnz()];
+            sddmm_parallel(&a, &b, &c, k, s, t, &mut got);
+            assert_eq!(got, base, "threads={t}");
+        }
+    }
+
+    #[test]
     fn empty_pattern() {
         let a = Csr::empty(4, 4);
         let b = dense(4 * 8, 3);
@@ -157,5 +268,8 @@ mod tests {
         let mut out = vec![];
         sddmm_scheduled(&a, &b, &c, 8, SddmmSchedule::default(), &mut out);
         assert!(out.is_empty());
+        let mut out2 = vec![];
+        sddmm_parallel(&a, &b, &c, 8, SddmmSchedule::default(), 4, &mut out2);
+        assert!(out2.is_empty());
     }
 }

@@ -5,7 +5,16 @@
 //! that (a) correctness of every schedule can be checked against the
 //! naive oracle and (b) wall-clock differences between schedules give a
 //! sanity anchor for the CPU analytical cost model.
+//!
+//! Every output element `(i, k)` accumulates `v · B[j, k]` over the
+//! sparse column index `j` in ascending order in *every* path — naive,
+//! scheduled (both `outer_k` settings), and parallel at any thread
+//! count — so all variants are bitwise identical, not just close.
+//! `spmm_parallel` splits rows by nonzero count
+//! (`kernels::nnz_balanced_partition`) and runs the full schedule
+//! within each thread's row range.
 
+use super::nnz_balanced_partition;
 use crate::sparse::Csr;
 
 /// Loop schedule for SpMM. Mirrors the CPU config space: the i loop
@@ -42,12 +51,38 @@ pub fn spmm_ref(a: &Csr, b: &[f32], n: usize, out: &mut [f32]) {
     }
 }
 
-/// Scheduled SpMM: identical numerics (FP reassociation aside — we keep
-/// per-element accumulation order row-major within a k-strip so results
-/// match the oracle to tight tolerance).
-pub fn spmm_scheduled(a: &Csr, b: &[f32], n: usize, s: SpmmSchedule, out: &mut [f32]) {
-    assert_eq!(b.len(), a.cols * n, "B shape");
-    assert_eq!(out.len(), a.rows * n, "D shape");
+/// `dst[k] += v * brow[k]` over `k0..k1`, 4-wide unrolled so the
+/// autovectorizer keeps lanes full. Element-wise (no reduction), so the
+/// unroll cannot change any accumulation order.
+#[inline]
+fn axpy_strip(dst: &mut [f32], brow: &[f32], v: f32, k0: usize, k1: usize) {
+    let mut k = k0;
+    while k + 4 <= k1 {
+        dst[k] += v * brow[k];
+        dst[k + 1] += v * brow[k + 1];
+        dst[k + 2] += v * brow[k + 2];
+        dst[k + 3] += v * brow[k + 3];
+        k += 4;
+    }
+    while k < k1 {
+        dst[k] += v * brow[k];
+        k += 1;
+    }
+}
+
+/// Scheduled SpMM over the row range `r0..r1`; `out` covers exactly
+/// those rows (`(r1 - r0) * n` elements). The shared core of the
+/// single-thread and parallel entry points.
+fn spmm_rows_scheduled(
+    a: &Csr,
+    b: &[f32],
+    n: usize,
+    s: SpmmSchedule,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
     out.fill(0.0);
     let ib = s.i_block.max(1);
     let kb = s.k_block.max(1);
@@ -56,31 +91,27 @@ pub fn spmm_scheduled(a: &Csr, b: &[f32], n: usize, s: SpmmSchedule, out: &mut [
         // re-streamed — good when B panel exceeds cache and n is large.
         for k0 in (0..n).step_by(kb) {
             let k1 = (k0 + kb).min(n);
-            for i0 in (0..a.rows).step_by(ib) {
-                let i1 = (i0 + ib).min(a.rows);
+            for i0 in (r0..r1).step_by(ib) {
+                let i1 = (i0 + ib).min(r1);
                 for i in i0..i1 {
-                    let dst = &mut out[i * n..(i + 1) * n];
+                    let dst = &mut out[(i - r0) * n..(i - r0 + 1) * n];
                     for (&j, &v) in a.row_indices(i).iter().zip(a.row_values(i)) {
                         let brow = &b[j as usize * n..(j as usize + 1) * n];
-                        for k in k0..k1 {
-                            dst[k] += v * brow[k];
-                        }
+                        axpy_strip(dst, brow, v, k0, k1);
                     }
                 }
             }
         }
     } else {
-        for i0 in (0..a.rows).step_by(ib) {
-            let i1 = (i0 + ib).min(a.rows);
+        for i0 in (r0..r1).step_by(ib) {
+            let i1 = (i0 + ib).min(r1);
             for i in i0..i1 {
-                let dst = &mut out[i * n..(i + 1) * n];
+                let dst = &mut out[(i - r0) * n..(i - r0 + 1) * n];
                 for (&j, &v) in a.row_indices(i).iter().zip(a.row_values(i)) {
                     let brow = &b[j as usize * n..(j as usize + 1) * n];
                     for k0 in (0..n).step_by(kb) {
                         let k1 = (k0 + kb).min(n);
-                        for k in k0..k1 {
-                            dst[k] += v * brow[k];
-                        }
+                        axpy_strip(dst, brow, v, k0, k1);
                     }
                 }
             }
@@ -88,34 +119,45 @@ pub fn spmm_scheduled(a: &Csr, b: &[f32], n: usize, s: SpmmSchedule, out: &mut [
     }
 }
 
-/// Multi-threaded scheduled SpMM over row blocks (static partition).
-pub fn spmm_parallel(a: &Csr, b: &[f32], n: usize, s: SpmmSchedule, threads: usize, out: &mut [f32]) {
-    assert_eq!(out.len(), a.rows * n);
-    out.fill(0.0);
+/// Scheduled SpMM: identical numerics to the oracle (per-element
+/// accumulation order is j-ascending in every schedule).
+pub fn spmm_scheduled(a: &Csr, b: &[f32], n: usize, s: SpmmSchedule, out: &mut [f32]) {
+    assert_eq!(b.len(), a.cols * n, "B shape");
+    assert_eq!(out.len(), a.rows * n, "D shape");
+    spmm_rows_scheduled(a, b, n, s, 0, a.rows, out);
+}
+
+/// Multi-threaded scheduled SpMM over nnz-balanced row ranges.
+///
+/// Each thread runs the full schedule on its own disjoint slice of the
+/// output; row ranges come from `nnz_balanced_partition`, so power-law
+/// matrices don't serialize behind the thread that drew the dense rows.
+/// Output is bitwise identical to `spmm_scheduled` for every thread
+/// count.
+pub fn spmm_parallel(
+    a: &Csr,
+    b: &[f32],
+    n: usize,
+    s: SpmmSchedule,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(b.len(), a.cols * n, "B shape");
+    assert_eq!(out.len(), a.rows * n, "D shape");
     let threads = threads.max(1);
-    let rows_per = a.rows.div_ceil(threads);
-    // Split the output into disjoint row chunks; each thread owns one.
-    let chunks: Vec<(usize, &mut [f32])> = out
-        .chunks_mut(rows_per * n)
-        .enumerate()
-        .map(|(t, c)| (t * rows_per, c))
-        .collect();
+    if threads == 1 || a.rows == 0 {
+        return spmm_rows_scheduled(a, b, n, s, 0, a.rows, out);
+    }
+    let bounds = nnz_balanced_partition(&a.indptr, threads);
     std::thread::scope(|scope| {
-        for (row0, chunk) in chunks {
-            scope.spawn(move || {
-                let rows = chunk.len() / n;
-                for i in 0..rows {
-                    let gi = row0 + i;
-                    let dst = &mut chunk[i * n..(i + 1) * n];
-                    for (&j, &v) in a.row_indices(gi).iter().zip(a.row_values(gi)) {
-                        let brow = &b[j as usize * n..(j as usize + 1) * n];
-                        for k in 0..n {
-                            dst[k] += v * brow[k];
-                        }
-                    }
-                }
-                let _ = s; // schedule currently only affects single-thread path
-            });
+        let mut rest: &mut [f32] = out;
+        for w in bounds.windows(2) {
+            let (r0, r1) = (w[0], w[1]);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * n);
+            rest = tail;
+            if r1 > r0 {
+                scope.spawn(move || spmm_rows_scheduled(a, b, n, s, r0, r1, chunk));
+            }
         }
     });
 }
@@ -178,6 +220,43 @@ mod tests {
             let mut got = vec![0.0; a.rows * n];
             spmm_parallel(&a, &b, n, SpmmSchedule::default(), t, &mut got);
             assert_close(&got, &expect, 1e-5);
+        }
+    }
+
+    #[test]
+    fn parallel_honors_schedule_both_outer_k() {
+        // Regression for the seed bug where spmm_parallel dropped its
+        // schedule (`let _ = s;`): the scheduled parallel path must
+        // match the oracle for outer_k both ways, at several thread
+        // counts and with awkward block sizes.
+        let a = generate(Family::PowerLaw, 257, 190, 0.03, 17);
+        let n = 33;
+        let b = dense_b(a.cols, n, 4);
+        let mut expect = vec![0.0; a.rows * n];
+        spmm_ref(&a, &b, n, &mut expect);
+        for &ok in &[false, true] {
+            let s = SpmmSchedule { i_block: 7, k_block: 5, outer_k: ok };
+            for &t in &[2usize, 3, 8] {
+                let mut got = vec![0.0; a.rows * n];
+                spmm_parallel(&a, &b, n, s, t, &mut got);
+                // Bitwise: accumulation order is j-ascending everywhere.
+                assert_eq!(got, expect, "outer_k={ok} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_bitwise_deterministic_across_threads() {
+        let a = generate(Family::PowerLaw, 500, 400, 0.02, 23);
+        let n = 17;
+        let b = dense_b(a.cols, n, 8);
+        let s = SpmmSchedule::default();
+        let mut base = vec![0.0; a.rows * n];
+        spmm_parallel(&a, &b, n, s, 1, &mut base);
+        for &t in &[2usize, 8] {
+            let mut got = vec![0.0; a.rows * n];
+            spmm_parallel(&a, &b, n, s, t, &mut got);
+            assert_eq!(got, base, "threads={t}");
         }
     }
 

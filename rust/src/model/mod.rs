@@ -6,7 +6,7 @@
 pub mod checkpoint;
 pub mod pca;
 
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{Runtime, Tensor, TensorView};
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
@@ -101,23 +101,23 @@ impl ModelDriver {
         self.step += 1;
         let lat = self.latent_dim();
         let tl = self.theta.len();
-        let theta = std::mem::take(&mut self.theta);
-        let m = std::mem::take(&mut self.m);
-        let v = std::mem::take(&mut self.v);
-        let out = self.rt.exec(
+        // Borrowed views: nothing is cloned into the runtime call — the
+        // seed implementation copied θ/m/v and every batch vector here.
+        let step = [self.step as f32];
+        let out = self.rt.exec_views(
             &format!("{}_train", self.variant),
             &[
-                Tensor::f32(theta, &[tl]),
-                Tensor::f32(m, &[tl]),
-                Tensor::f32(v, &[tl]),
-                Tensor::scalar_f32(self.step as f32),
-                Tensor::f32(batch.dmap.clone(), &[b, c, h, w]),
-                Tensor::f32(batch.cfg_a.clone(), &[b, self.cfg_dim]),
-                Tensor::f32(batch.z_a.clone(), &[b, lat]),
-                Tensor::f32(batch.cfg_b.clone(), &[b, self.cfg_dim]),
-                Tensor::f32(batch.z_b.clone(), &[b, lat]),
-                Tensor::f32(batch.sign.clone(), &[b]),
-                Tensor::f32(batch.weight.clone(), &[b]),
+                TensorView::F32(&self.theta, &[tl]),
+                TensorView::F32(&self.m, &[tl]),
+                TensorView::F32(&self.v, &[tl]),
+                TensorView::F32(&step, &[]),
+                TensorView::F32(&batch.dmap, &[b, c, h, w]),
+                TensorView::F32(&batch.cfg_a, &[b, self.cfg_dim]),
+                TensorView::F32(&batch.z_a, &[b, lat]),
+                TensorView::F32(&batch.cfg_b, &[b, self.cfg_dim]),
+                TensorView::F32(&batch.z_b, &[b, lat]),
+                TensorView::F32(&batch.sign, &[b]),
+                TensorView::F32(&batch.weight, &[b]),
             ],
         )?;
         let mut it = out.into_iter();
@@ -135,18 +135,22 @@ impl ModelDriver {
         let ed = self.embed_dim();
         let (c, h, w) =
             (self.rt.dim("DMAP_C"), self.rt.dim("DMAP_H"), self.rt.dim("DMAP_W"));
+        let name = format!("{}_featurize", self.variant);
+        let tl = self.theta.len();
         let mut out = Vec::with_capacity(dmaps.len());
+        // One staging buffer reused across chunks; θ passed by view.
+        let mut buf = vec![0f32; fb * dl];
         for chunk in dmaps.chunks(fb) {
-            let mut buf = vec![0f32; fb * dl];
             for (i, d) in chunk.iter().enumerate() {
                 anyhow::ensure!(d.len() == dl, "density map length");
                 buf[i * dl..(i + 1) * dl].copy_from_slice(d);
             }
-            let res = self.rt.exec(
-                &format!("{}_featurize", self.variant),
+            buf[chunk.len() * dl..].fill(0.0);
+            let res = self.rt.exec_views(
+                &name,
                 &[
-                    Tensor::f32(self.theta.clone(), &[self.theta.len()]),
-                    Tensor::f32(buf, &[fb, c, h, w]),
+                    TensorView::F32(&self.theta, &[tl]),
+                    TensorView::F32(&buf, &[fb, c, h, w]),
                 ],
             )?;
             let s = res.into_iter().next().context("featurize out")?.into_f32();
@@ -166,26 +170,34 @@ impl ModelDriver {
         anyhow::ensure!(s_embed.len() == ed, "embedding length");
         let n = cfgs.len() / self.cfg_dim;
         anyhow::ensure!(zs.len() == n * lat, "z rows");
+        let name = format!("{}_score_cached", self.variant);
+        let tl = self.theta.len();
         let mut scores = Vec::with_capacity(n);
+        // The replicated embedding tile is built once and passed by view
+        // to every chunk (the seed cloned it, θ, and fresh cfg/z staging
+        // buffers per chunk). Staging buffers are reused with zeroed
+        // tails for the final partial chunk.
         let mut s_tile = vec![0f32; sb * ed];
         for row in 0..sb {
             s_tile[row * ed..(row + 1) * ed].copy_from_slice(s_embed);
         }
+        let mut cbuf = vec![0f32; sb * self.cfg_dim];
+        let mut zbuf = vec![0f32; sb * lat];
         let mut start = 0usize;
         while start < n {
             let count = (n - start).min(sb);
-            let mut cbuf = vec![0f32; sb * self.cfg_dim];
-            let mut zbuf = vec![0f32; sb * lat];
             cbuf[..count * self.cfg_dim]
                 .copy_from_slice(&cfgs[start * self.cfg_dim..(start + count) * self.cfg_dim]);
+            cbuf[count * self.cfg_dim..].fill(0.0);
             zbuf[..count * lat].copy_from_slice(&zs[start * lat..(start + count) * lat]);
-            let res = self.rt.exec(
-                &format!("{}_score_cached", self.variant),
+            zbuf[count * lat..].fill(0.0);
+            let res = self.rt.exec_views(
+                &name,
                 &[
-                    Tensor::f32(self.theta.clone(), &[self.theta.len()]),
-                    Tensor::f32(s_tile.clone(), &[sb, ed]),
-                    Tensor::f32(cbuf, &[sb, self.cfg_dim]),
-                    Tensor::f32(zbuf, &[sb, lat]),
+                    TensorView::F32(&self.theta, &[tl]),
+                    TensorView::F32(&s_tile, &[sb, ed]),
+                    TensorView::F32(&cbuf, &[sb, self.cfg_dim]),
+                    TensorView::F32(&zbuf, &[sb, lat]),
                 ],
             )?;
             let r = res.into_iter().next().context("score out")?.into_f32();
@@ -231,18 +243,16 @@ impl AeDriver {
         anyhow::ensure!(eps.len() == b * lat, "ae eps shape");
         self.step += 1;
         let tl = self.theta.len();
-        let theta = std::mem::take(&mut self.theta);
-        let m = std::mem::take(&mut self.m);
-        let v = std::mem::take(&mut self.v);
-        let out = self.rt.exec(
+        let step = [self.step as f32];
+        let out = self.rt.exec_views(
             &format!("{}_train", self.kind),
             &[
-                Tensor::f32(theta, &[tl]),
-                Tensor::f32(m, &[tl]),
-                Tensor::f32(v, &[tl]),
-                Tensor::scalar_f32(self.step as f32),
-                Tensor::f32(x.to_vec(), &[b, hd]),
-                Tensor::f32(eps.to_vec(), &[b, lat]),
+                TensorView::F32(&self.theta, &[tl]),
+                TensorView::F32(&self.m, &[tl]),
+                TensorView::F32(&self.v, &[tl]),
+                TensorView::F32(&step, &[]),
+                TensorView::F32(x, &[b, hd]),
+                TensorView::F32(eps, &[b, lat]),
             ],
         )?;
         let mut it = out.into_iter();
@@ -258,18 +268,18 @@ impl AeDriver {
         let hd = self.rt.dim("HET_DIM");
         let lat = self.rt.dim("LATENT_DIM");
         let n = x.len() / hd;
+        let name = format!("{}_encode", self.kind);
+        let tl = self.theta.len();
         let mut out = Vec::with_capacity(n * lat);
+        let mut buf = vec![0f32; b * hd];
         let mut start = 0;
         while start < n {
             let count = (n - start).min(b);
-            let mut buf = vec![0f32; b * hd];
             buf[..count * hd].copy_from_slice(&x[start * hd..(start + count) * hd]);
-            let res = self.rt.exec(
-                &format!("{}_encode", self.kind),
-                &[
-                    Tensor::f32(self.theta.clone(), &[self.theta.len()]),
-                    Tensor::f32(buf, &[b, hd]),
-                ],
+            buf[count * hd..].fill(0.0);
+            let res = self.rt.exec_views(
+                &name,
+                &[TensorView::F32(&self.theta, &[tl]), TensorView::F32(&buf, &[b, hd])],
             )?;
             let z = res.into_iter().next().context("ae encode")?.into_f32();
             out.extend_from_slice(&z[..count * lat]);

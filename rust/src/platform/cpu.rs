@@ -46,7 +46,7 @@ pub const REORDER_CPN: f64 = 4.0;
 pub const BETA: f64 = 1.0;
 
 pub struct CpuSim {
-    space: Vec<CpuConfig>,
+    space: &'static [CpuConfig],
     default_idx: usize,
 }
 

@@ -37,7 +37,7 @@ pub const LAUNCH: f64 = 8_000.0;
 pub const BETA: f64 = 50.0;
 
 pub struct GpuSim {
-    space: Vec<GpuConfig>,
+    space: &'static [GpuConfig],
     default_idx: usize,
 }
 

@@ -50,7 +50,7 @@ pub const REORDER_CPN: f64 = 1.0;
 pub const BETA: f64 = 1000.0;
 
 pub struct SpadeSim {
-    space: Vec<SpadeConfig>,
+    space: &'static [SpadeConfig],
     default_idx: usize,
 }
 
@@ -317,13 +317,13 @@ mod tests {
             let space = spade_space();
             let best_on = costs
                 .iter()
-                .zip(&space)
+                .zip(space)
                 .filter(|(_, c)| c.reorder)
                 .map(|(&x, _)| x)
                 .fold(f64::INFINITY, f64::min);
             let best_off = costs
                 .iter()
-                .zip(&space)
+                .zip(space)
                 .filter(|(_, c)| !c.reorder)
                 .map(|(&x, _)| x)
                 .fold(f64::INFINITY, f64::min);

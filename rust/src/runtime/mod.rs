@@ -63,9 +63,36 @@ impl Tensor {
             _ => panic!("tensor is not f32"),
         }
     }
+    /// Borrowed view of this tensor (no data copy).
+    pub fn view(&self) -> TensorView<'_> {
+        match self {
+            Tensor::F32(d, sh) => TensorView::F32(d, sh),
+            Tensor::I32(d, sh) => TensorView::I32(d, sh),
+        }
+    }
+}
+
+/// Borrowed tensor input for `Runtime::exec_views`: lets hot paths
+/// (batched scoring, featurization, train steps) pass `theta`, shared
+/// embedding tiles, and reused staging buffers straight to PJRT without
+/// cloning them into owned `Tensor`s per call.
+#[derive(Clone, Copy, Debug)]
+pub enum TensorView<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> TensorView<'a> {
+    fn len_and_shape(&self) -> (usize, &'a [usize]) {
+        match self {
+            TensorView::F32(d, sh) => (d.len(), sh),
+            TensorView::I32(d, sh) => (d.len(), sh),
+        }
+    }
+
     fn to_literal(&self) -> Result<xla::Literal> {
         Ok(match self {
-            Tensor::F32(d, shape) => {
+            TensorView::F32(d, shape) => {
                 let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
                 if dims.is_empty() {
                     xla::Literal::scalar(d[0])
@@ -73,7 +100,7 @@ impl Tensor {
                     xla::Literal::vec1(d).reshape(&dims)?
                 }
             }
-            Tensor::I32(d, shape) => {
+            TensorView::I32(d, shape) => {
                 let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
                 if dims.is_empty() {
                     xla::Literal::scalar(d[0])
@@ -214,8 +241,16 @@ impl Runtime {
         Ok(exe)
     }
 
-    /// Execute an artifact. Inputs are validated against the manifest.
+    /// Execute an artifact from owned tensors. Convenience wrapper over
+    /// `exec_views`.
     pub fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let views: Vec<TensorView<'_>> = inputs.iter().map(Tensor::view).collect();
+        self.exec_views(name, &views)
+    }
+
+    /// Execute an artifact from borrowed tensor views — the zero-copy
+    /// entry point. Inputs are validated against the manifest.
+    pub fn exec_views(&self, name: &str, inputs: &[TensorView<'_>]) -> Result<Vec<Tensor>> {
         let spec = self
             .specs
             .get(name)
@@ -225,11 +260,8 @@ impl Runtime {
             bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
         }
         for (t, s) in inputs.iter().zip(&spec.inputs) {
-            let (len, shape) = match t {
-                Tensor::F32(d, sh) => (d.len(), sh),
-                Tensor::I32(d, sh) => (d.len(), sh),
-            };
-            if len != s.elems() || shape != &s.shape {
+            let (len, shape) = t.len_and_shape();
+            if len != s.elems() || shape != s.shape.as_slice() {
                 bail!(
                     "{name}: input {:?} shape mismatch: got {shape:?} want {:?}",
                     s.name,
@@ -312,5 +344,25 @@ mod tests {
     #[should_panic]
     fn tensor_shape_mismatch_panics() {
         let _ = Tensor::f32(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn tensor_view_borrows_without_copy() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        match t.view() {
+            TensorView::F32(d, sh) => {
+                assert!(std::ptr::eq(d.as_ptr(), t.as_f32().as_ptr()));
+                assert_eq!(sh, &[2, 2]);
+            }
+            _ => panic!("wrong view variant"),
+        }
+        let i = Tensor::scalar_i32(7);
+        match i.view() {
+            TensorView::I32(d, sh) => {
+                assert_eq!(d, &[7]);
+                assert!(sh.is_empty());
+            }
+            _ => panic!("wrong view variant"),
+        }
     }
 }

@@ -4,8 +4,18 @@
 //! keep the fastest. Speedups are measured against the platform's
 //! default configuration; the exhaustive optimum comes free from the
 //! dataset's full cost vectors.
+//!
+//! For spaces too large to score exhaustively, `anneal` runs simulated
+//! annealing whose neighbourhood moves are O(1): a config index is its
+//! mixed-radix encoding over the knob radices (`config::radices`), so a
+//! single-knob mutation is one digit replacement — no space rebuild, no
+//! linear rescan. `par_anneal` distributes the restart chains across
+//! threads with deterministic per-chain seeds and merges best-of, making
+//! results independent of thread count.
 
 pub mod anneal;
+
+pub use anneal::{anneal, par_anneal, AnnealOpts, AnnealResult, Scorer};
 
 use crate::dataset::{Dataset, MatrixRecord};
 use crate::model::ModelDriver;

@@ -27,9 +27,9 @@ pub struct ConfigFeatures {
 /// NUM_MATRIX_COLS tiling option, so this is per-matrix for SPADE.
 pub fn config_features(platform: PlatformId, cols: usize) -> ConfigFeatures {
     let configs: Vec<Config> = match platform {
-        PlatformId::Cpu => config::cpu_space().into_iter().map(Config::Cpu).collect(),
-        PlatformId::Spade => config::spade_space().into_iter().map(Config::Spade).collect(),
-        PlatformId::Gpu => config::gpu_space().into_iter().map(Config::Gpu).collect(),
+        PlatformId::Cpu => config::cpu_space().iter().copied().map(Config::Cpu).collect(),
+        PlatformId::Spade => config::spade_space().iter().copied().map(Config::Spade).collect(),
+        PlatformId::Gpu => config::gpu_space().iter().copied().map(Config::Gpu).collect(),
     };
     let n = configs.len();
     let mut mapped = Vec::with_capacity(n * config::MAPPED_DIM);

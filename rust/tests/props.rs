@@ -140,10 +140,11 @@ fn prop_makespan_bounds() {
 fn prop_encodings_deterministic_and_sized() {
     let mut rng = Rng::new(107);
     let spaces: Vec<Config> = config::cpu_space()
-        .into_iter()
+        .iter()
+        .copied()
         .map(Config::Cpu)
-        .chain(config::spade_space().into_iter().map(Config::Spade))
-        .chain(config::gpu_space().into_iter().map(Config::Gpu))
+        .chain(config::spade_space().iter().copied().map(Config::Spade))
+        .chain(config::gpu_space().iter().copied().map(Config::Gpu))
         .collect();
     for _ in 0..200 {
         let cfg = spaces[rng.next_usize(spaces.len())];

@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Repo verification gate: build, test, lint, then produce the kernel A/B
+# numbers (BENCH_kernels.json at the repo root).
+#
+# The growth container does not ship the Rust toolchain, so this script
+# is the CI entry point — it degrades to a clear error instead of a
+# confusing cascade when cargo is absent.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify.sh: cargo not found on PATH — install the Rust toolchain" >&2
+    echo "           (rustup.rs) or run this from the CI image." >&2
+    exit 2
+fi
+
+manifest=""
+for cand in Cargo.toml rust/Cargo.toml; do
+    if [ -f "$cand" ]; then
+        manifest="$cand"
+        break
+    fi
+done
+if [ -z "$manifest" ]; then
+    echo "verify.sh: no Cargo.toml found (expected at repo root or rust/)" >&2
+    exit 2
+fi
+
+echo "== build (release) =="
+cargo build --release --manifest-path "$manifest"
+
+echo "== test =="
+cargo test -q --manifest-path "$manifest"
+
+echo "== clippy =="
+cargo clippy --all-targets --manifest-path "$manifest" -- -D warnings
+
+echo "== kernel A/B bench → BENCH_kernels.json =="
+BENCH_OUT="$(pwd)/BENCH_kernels.json" \
+    cargo bench --bench bench_perf_ab --manifest-path "$manifest"
+
+echo "verify.sh: all gates passed"
