@@ -2,7 +2,12 @@
 //! quickly fine-tuned model and fire concurrent client requests at it,
 //! reporting latency and batching behaviour.
 //!
-//!   cargo run --release --example serve_demo
+//!   cargo run --release --example serve_demo [-- --metrics-out PATH]
+//!
+//! With `--metrics-out PATH` (or `COGNATE_METRICS_OUT=PATH`), writes
+//! the process-global telemetry snapshot as JSON after the run — the
+//! server runs in-process, so the snapshot covers train + serve. The
+//! verify.sh smoke step uses this to assert `serve.jobs_total` > 0.
 
 use cognate::config::PlatformId;
 use cognate::coordinator::{serve, Pipeline, Scale};
@@ -68,5 +73,18 @@ fn main() -> Result<()> {
         batched.iter().sum::<f64>() / batched.len() as f64,
     );
     let _ = server.join().unwrap();
+
+    // Telemetry snapshot: --metrics-out PATH beats COGNATE_METRICS_OUT.
+    let argv: Vec<String> = std::env::args().collect();
+    let metrics_out = argv
+        .iter()
+        .position(|a| a == "--metrics-out")
+        .and_then(|i| argv.get(i + 1).cloned())
+        .or_else(|| std::env::var("COGNATE_METRICS_OUT").ok());
+    if let Some(path) = metrics_out {
+        let snap = cognate::util::metrics::registry().snapshot();
+        std::fs::write(&path, format!("{}\n", snap.to_string()))?;
+        println!("wrote metrics snapshot: {path}");
+    }
     Ok(())
 }

@@ -1,0 +1,110 @@
+//! Telemetry hot-path micro-bench and regression gate.
+//!
+//! The metrics substrate promises lock-free, allocation-free updates:
+//! a counter bump through the `counter!` macro is one `OnceLock` load
+//! plus one relaxed `fetch_add`. This bench measures the per-op cost of
+//! every hot-path primitive and *fails* (non-zero exit) if the macro
+//! counter increment exceeds `MAX_NS_PER_INC` — so a future "just wrap
+//! it in a Mutex" regression breaks `scripts/verify.sh`, not production.
+//!
+//! Results land in `BENCH_metrics.json` at the repo root (override with
+//! `BENCH_OUT`). No artifacts required.
+
+use cognate::util::bench::{bench, black_box};
+use cognate::util::json::Json;
+use cognate::util::metrics::{Counter, Histogram};
+
+/// Gate: macro-path counter increment must stay below this (the ISSUE
+/// budget is 50ns; typical hardware lands in the low single digits).
+const MAX_NS_PER_INC: f64 = 50.0;
+
+/// Inner-loop size: large enough to amortize the harness's `Instant`
+/// reads down to noise, small enough to keep iterations snappy.
+const OPS: usize = 10_000;
+
+fn repo_root() -> std::path::PathBuf {
+    let start = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut d = start.clone();
+    loop {
+        if d.join("CHANGES.md").exists() || d.join(".git").exists() {
+            return d;
+        }
+        if !d.pop() {
+            return start;
+        }
+    }
+}
+
+fn ns_per_op(min_s: f64) -> f64 {
+    min_s * 1e9 / OPS as f64
+}
+
+fn main() {
+    let mut results: Vec<(&str, f64)> = Vec::new();
+
+    // 1. Raw cell: the floor — a single relaxed fetch_add.
+    let raw = Counter::new();
+    let r = bench("counter.inc (raw cell)", 5, 200, 2.0, || {
+        for _ in 0..OPS {
+            black_box(&raw).inc();
+        }
+    });
+    r.report();
+    results.push(("counter_inc_raw_ns", ns_per_op(r.min_s)));
+
+    // 2. Macro path: what instrumented code actually pays (OnceLock
+    //    load + fetch_add). This is the gated number.
+    let r = bench("counter! macro increment", 5, 200, 2.0, || {
+        for _ in 0..OPS {
+            cognate::counter!("bench.metrics.ctr").inc();
+        }
+    });
+    r.report();
+    let macro_ns = ns_per_op(r.min_s);
+    results.push(("counter_inc_macro_ns", macro_ns));
+
+    // 3. Histogram observe: leading_zeros bucket + 3 fetch_adds.
+    let hist = Histogram::new();
+    let r = bench("histogram.observe", 5, 200, 2.0, || {
+        for i in 0..OPS {
+            black_box(&hist).observe(i as u64);
+        }
+    });
+    r.report();
+    results.push(("histogram_observe_ns", ns_per_op(r.min_s)));
+
+    // 4. Gauge set through the macro.
+    let r = bench("gauge! macro set", 5, 200, 2.0, || {
+        for i in 0..OPS {
+            cognate::gauge!("bench.metrics.g").set(i as f64);
+        }
+    });
+    r.report();
+    results.push(("gauge_set_macro_ns", ns_per_op(r.min_s)));
+
+    // 5. time_span! around a trivial body: two Instant reads + observe.
+    let r = bench("time_span! empty body", 5, 100, 2.0, || {
+        for i in 0..OPS / 10 {
+            black_box(cognate::time_span!("bench.metrics.span_us", i + 1));
+        }
+    });
+    r.report();
+    results.push(("time_span_ns", r.min_s * 1e9 / (OPS / 10) as f64));
+
+    let mut obj: Vec<(&str, Json)> = results.iter().map(|&(k, v)| (k, Json::Num(v))).collect();
+    obj.push(("max_ns_per_inc_gate", Json::Num(MAX_NS_PER_INC)));
+    let out = std::env::var("BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| repo_root().join("BENCH_metrics.json"));
+    std::fs::write(&out, format!("{}\n", Json::obj(obj).to_string())).expect("write bench json");
+    println!("wrote {}", out.display());
+
+    if macro_ns > MAX_NS_PER_INC {
+        eprintln!(
+            "FAIL: counter! increment {macro_ns:.1}ns/op exceeds the {MAX_NS_PER_INC:.0}ns gate \
+             (did the hot path grow a lock?)"
+        );
+        std::process::exit(1);
+    }
+    println!("PASS: counter! increment {macro_ns:.1}ns/op (< {MAX_NS_PER_INC:.0}ns gate)");
+}

@@ -5,8 +5,13 @@
 //!   cognate pretrain   [--op O] [--variant V]      pre-train on CPU, save θ
 //!   cognate experiment <id|all> [--scale N]        regenerate paper tables/figures
 //!   cognate search     [--op O] [--target P]       tune one synthetic matrix end to end
-//!   cognate serve      [--addr A]                  run the auto-tuning service
+//!   cognate serve      [--addr A] [--max-jobs N]  run the auto-tuning service
+//!   cognate stats      [--addr A]                 scrape a running service's metrics
 //!   cognate bench-sim                              quick simulator throughput check
+//!
+//! Every command accepts `--metrics-out PATH` to dump the telemetry
+//! snapshot at exit (written as `METRICS_<cmd>.json` when PATH is a
+//! directory).
 
 use crate::config::PlatformId;
 use crate::coordinator::{experiments, Pipeline, Scale};
@@ -88,25 +93,50 @@ COMMANDS
                                                regenerate a paper table/figure
   search      [--op O] [--target P] [--k K] [--scale N]
                                                tune one synthetic matrix end to end
-  serve       [--addr 127.0.0.1:7199] [--target P] [--op O] [--scale N]
+  serve       [--addr 127.0.0.1:7199] [--target P] [--op O] [--scale N] [--max-jobs N]
                                                run the batched auto-tuning service
+                                               (--max-jobs N stops after N jobs; 0 = forever)
+  stats       [--addr 127.0.0.1:7199]          fetch a live telemetry snapshot from a
+                                               running service ({\"stats\": true} request)
   help                                         this text
+
+GLOBAL FLAGS
+  --metrics-out PATH    write the telemetry snapshot (counters / gauges /
+                        histograms, sorted JSON) when the command exits;
+                        if PATH is a directory, writes METRICS_<cmd>.json
+
+ENVIRONMENT
+  COGNATE_LOG           stderr verbosity: quiet|warn|info|debug (or 0-3);
+                        default info
+  COGNATE_ARTIFACTS     override the ./artifacts directory
 
 Artifacts must exist (run `make artifacts`); set COGNATE_ARTIFACTS to
 override the ./artifacts directory.";
 
 pub fn main_inner(argv: &[String]) -> Result<()> {
     let args = parse(argv)?;
+    let result = dispatch(&args);
+    // Snapshot even when the command failed — partial telemetry is
+    // often the most useful artifact of a failed run.
+    if args.flags.contains_key("metrics-out") {
+        if let Err(e) = write_metrics_out(&args) {
+            crate::warn!("metrics-out: {e:#}");
+        }
+    }
+    result
+}
+
+fn dispatch(args: &Args) -> Result<()> {
     match args.cmd.as_str() {
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())
         }
-        "gen" => cmd_gen(&args),
-        "collect" => cmd_collect(&args),
-        "pretrain" => cmd_pretrain(&args),
-        "finetune" => cmd_finetune(&args),
-        "eval" => cmd_eval(&args),
+        "gen" => cmd_gen(args),
+        "collect" => cmd_collect(args),
+        "pretrain" => cmd_pretrain(args),
+        "finetune" => cmd_finetune(args),
+        "eval" => cmd_eval(args),
         "roofline" => {
             let t = crate::platform::roofline::report(
                 args.flag_usize("block-m", 1024),
@@ -115,11 +145,40 @@ pub fn main_inner(argv: &[String]) -> Result<()> {
             println!("{}", t.render());
             Ok(())
         }
-        "experiment" => cmd_experiment(&args),
-        "search" => cmd_search(&args),
-        "serve" => cmd_serve(&args),
+        "experiment" => cmd_experiment(args),
+        "search" => cmd_search(args),
+        "serve" => cmd_serve(args),
+        "stats" => cmd_stats(args),
         other => bail!("unknown command {other:?} — see `cognate help`"),
     }
+}
+
+/// Resolve `--metrics-out` and write the registry snapshot there.
+fn write_metrics_out(args: &Args) -> Result<()> {
+    let raw = args.flag("metrics-out", "");
+    anyhow::ensure!(!raw.is_empty() && raw != "true", "--metrics-out needs a PATH");
+    let mut path = std::path::PathBuf::from(&raw);
+    if path.is_dir() {
+        path = path.join(format!("METRICS_{}.json", args.cmd));
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let snap = crate::util::metrics::registry().snapshot();
+    std::fs::write(&path, format!("{}\n", snap.to_string()))?;
+    println!("wrote metrics snapshot: {}", path.display());
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.flag("addr", "127.0.0.1:7199");
+    let sock: std::net::SocketAddr =
+        addr.parse().with_context(|| format!("bad --addr {addr:?}"))?;
+    let snap = crate::coordinator::serve::request_stats(sock)?;
+    println!("{}", snap.to_string());
+    Ok(())
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -228,6 +287,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let op = args.op()?;
     let target = args.platform("target", "spade")?;
     let addr = args.flag("addr", "127.0.0.1:7199");
+    let max_jobs = match args.flag_usize("max-jobs", 0) {
+        0 => None,
+        n => Some(n),
+    };
 
     let src = pipe.dataset(PlatformId::Cpu, op)?;
     let (src_pool, _) = pipe.splits(&src);
@@ -242,7 +305,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     train(&mut driver, &zenc, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone())?;
 
     println!("serving tuned cost model on {addr} (Ctrl-C to stop)");
-    crate::coordinator::serve::serve(driver, zenc, target, &addr, None, |a| {
+    crate::coordinator::serve::serve(driver, zenc, target, &addr, max_jobs, |a| {
         println!("ready on {a}");
     })
 }

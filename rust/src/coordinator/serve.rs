@@ -12,7 +12,18 @@
 //!   request:  {"id": 1, "k": 5, "rows": R, "cols": C,
 //!              "coo": [[r, c, v], ...]}
 //!   response: {"id": 1, "top": [cfg_idx, ...], "scores": [...],
-//!              "latency_ms": ..., "batched_with": n}
+//!              "latency_ms": ..., "batched_with": n,
+//!              "stages": {"queue_wait_ms": ..., "featurize_ms": ...,
+//!                         "score_ms": ...}}
+//!   control:  {"stats": true} → a full `util::metrics` snapshot
+//!             (answered by the connection handler, never queued), so
+//!             operators can scrape the live service.
+//!
+//! Telemetry (canonical names in ROADMAP.md "Telemetry"): every job
+//! dequeued by the batcher bumps `serve.jobs_total` and observes
+//! `serve.queue_wait_us` exactly once, so `queue_wait_us.count ==
+//! jobs_total` whenever the service is quiescent. Error replies of any
+//! kind bump `serve.errors_total`.
 
 use crate::dataset::MatrixRecord;
 use crate::model::ModelDriver;
@@ -24,7 +35,8 @@ use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 pub struct Job {
@@ -38,7 +50,17 @@ pub struct Job {
 /// Linger window for batch coalescing.
 pub const LINGER: Duration = Duration::from_millis(8);
 
-/// Run the service until `shutdown` jobs have been served (`None` = forever).
+/// Run the service until `max_jobs` *jobs* have been served (`None` =
+/// forever). Both the batcher and the accept loop key off the same job
+/// count: when the batcher exhausts the budget it raises a shutdown
+/// flag and wakes the acceptor, so a single connection sending many
+/// requests consumes the budget exactly like many connections sending
+/// one each. (The seed counted accepted *connections* against
+/// `max_jobs`, which stopped new connections early while the batcher
+/// kept serving.) A batch in flight is always completed, so slightly
+/// more than `max_jobs` jobs may be answered when the last batch
+/// coalesced past the budget.
+///
 /// Returns the bound address via the callback before serving.
 pub fn serve(
     driver: ModelDriver,
@@ -51,26 +73,33 @@ pub fn serve(
     let listener = TcpListener::bind(addr).context("bind")?;
     let local = listener.local_addr()?;
     let (tx, rx) = mpsc::channel::<Job>();
+    let done = Arc::new(AtomicBool::new(false));
 
-    // Batcher thread: the only owner of the model driver.
-    let batcher = std::thread::spawn(move || batcher_loop(driver, zenc, platform, rx, max_jobs));
+    // Batcher thread: the only owner of the model driver, and the only
+    // counter of served jobs. When it exits (budget reached or channel
+    // closed) it flags shutdown and pokes the listener awake.
+    let batcher = {
+        let done = done.clone();
+        std::thread::spawn(move || {
+            batcher_loop(driver, zenc, platform, rx, max_jobs);
+            done.store(true, Ordering::Release);
+            let _ = TcpStream::connect(local);
+        })
+    };
     on_ready(local);
 
     // Acceptor: one handler thread per connection (connections are few;
     // the expensive resource — the model — is behind the queue anyway).
-    let mut served = 0usize;
     for stream in listener.incoming() {
+        if done.load(Ordering::Acquire) {
+            break;
+        }
         let Ok(stream) = stream else { continue };
+        crate::counter!("serve.connections_total").inc();
         let tx = tx.clone();
         std::thread::spawn(move || {
             let _ = handle_conn(stream, tx);
         });
-        served += 1;
-        if let Some(m) = max_jobs {
-            if served >= m {
-                break;
-            }
-        }
     }
     drop(tx);
     let _ = batcher.join();
@@ -89,22 +118,45 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>) -> Result<()> {
         let req = match Json::parse(&line) {
             Ok(r) => r,
             Err(e) => {
+                crate::counter!("serve.errors_total").inc();
                 let err = Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]);
                 writeln!(writer, "{}", err.to_string())?;
                 continue;
             }
         };
+        // Control request: live metrics snapshot, answered here so it
+        // works even while the scoring queue is saturated (and after
+        // the job budget is spent, as long as the acceptor is up).
+        if req.get("stats").and_then(|v| v.as_bool()) == Some(true) {
+            crate::counter!("serve.stats_requests_total").inc();
+            writeln!(
+                writer,
+                "{}",
+                crate::util::metrics::registry().snapshot().to_string()
+            )?;
+            continue;
+        }
         match parse_request(&req) {
             Ok((id, k, matrix)) => {
                 let (rtx, rrx) = mpsc::channel();
-                tx.send(Job { id, k, matrix, reply: rtx, arrived: Instant::now() })
-                    .map_err(|_| anyhow::anyhow!("service shut down"))?;
+                let job = Job { id, k, matrix, reply: rtx, arrived: Instant::now() };
+                if tx.send(job).is_err() {
+                    // Batcher already shut down (job budget exhausted):
+                    // still reply with well-formed JSON.
+                    crate::counter!("serve.errors_total").inc();
+                    let err =
+                        Json::obj(vec![("error", Json::Str("service shutting down".into()))]);
+                    writeln!(writer, "{}", err.to_string())?;
+                    continue;
+                }
                 let resp = rrx.recv().unwrap_or_else(|_| {
+                    crate::counter!("serve.errors_total").inc();
                     Json::obj(vec![("error", Json::Str("batcher died".into()))])
                 });
                 writeln!(writer, "{}", resp.to_string())?;
             }
             Err(e) => {
+                crate::counter!("serve.errors_total").inc();
                 let err = Json::obj(vec![("error", Json::Str(e.to_string()))]);
                 writeln!(writer, "{}", err.to_string())?;
             }
@@ -114,12 +166,24 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>) -> Result<()> {
     Ok(())
 }
 
+/// Parse a scoring request. Never panics on malformed input — every
+/// missing/ill-typed field becomes an `Err` that the handler turns into
+/// an `{"error": ...}` reply.
 fn parse_request(req: &Json) -> Result<(i64, usize, Csr)> {
     let id = req.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
     let k = req.get("k").and_then(|v| v.as_usize()).unwrap_or(5);
-    let rows = req.req("rows").as_usize().context("rows")?;
-    let cols = req.req("cols").as_usize().context("cols")?;
-    let coo_json = req.req("coo").as_arr().context("coo")?;
+    let rows = req
+        .get("rows")
+        .and_then(|v| v.as_usize())
+        .context("missing or invalid \"rows\"")?;
+    let cols = req
+        .get("cols")
+        .and_then(|v| v.as_usize())
+        .context("missing or invalid \"cols\"")?;
+    let coo_json = req
+        .get("coo")
+        .and_then(|v| v.as_arr())
+        .context("missing or invalid \"coo\"")?;
     let mut coo = Vec::with_capacity(coo_json.len());
     for e in coo_json {
         let t = e.as_arr().context("coo entry")?;
@@ -170,24 +234,50 @@ fn batcher_loop(
             }
         }
         let n_batched = batch.len();
+        let dequeued = Instant::now();
+        crate::histogram!("serve.batch_size").observe(n_batched as u64);
+        // One queue-wait observation and one jobs_total bump per job —
+        // adjacent so the stats invariant has no wide race window.
+        for job in &batch {
+            crate::histogram!("serve.queue_wait_us")
+                .observe_duration(dequeued.duration_since(job.arrived));
+            crate::counter!("serve.jobs_total").inc();
+        }
         let dmaps: Vec<Vec<f32>> = batch.iter().map(|j| density_map(&j.matrix)).collect();
         let dmap_refs: Vec<&[f32]> = dmaps.iter().map(|d| d.as_slice()).collect();
-        let embeds = match driver.featurize(&dmap_refs) {
+        let t_feat = Instant::now();
+        let featurized = driver.featurize(&dmap_refs);
+        let feat_elapsed = t_feat.elapsed();
+        crate::histogram!("serve.featurize_us").observe_duration(feat_elapsed);
+        let embeds = match featurized {
             Ok(e) => e,
             Err(e) => {
                 for job in &batch {
+                    crate::counter!("serve.errors_total").inc();
                     let _ = job.reply.send(Json::obj(vec![(
                         "error",
                         Json::Str(format!("featurize: {e}")),
                     )]));
                 }
+                served += batch.len();
+                if matches!(max_jobs, Some(m) if served >= m) {
+                    break;
+                }
                 continue;
             }
         };
+        // featurize_ms is shared across the batch (one PJRT call).
+        let featurize_ms = feat_elapsed.as_secs_f64() * 1e3;
         for (job, embed) in batch.into_iter().zip(embeds) {
+            let queue_wait_ms =
+                dequeued.duration_since(job.arrived).as_secs_f64() * 1e3;
             let feats = config_features(platform, job.matrix.cols);
             let (cfg, _) = feats.cfg_for_variant(&driver.variant);
-            let resp = match driver.score_configs(&embed, cfg, &z_all) {
+            let t_score = Instant::now();
+            let scored = driver.score_configs(&embed, cfg, &z_all);
+            let score_elapsed = t_score.elapsed();
+            crate::histogram!("serve.score_us").observe_duration(score_elapsed);
+            let resp = match scored {
                 Ok(scores) => {
                     let top = top_k(&scores, job.k);
                     Json::obj(vec![
@@ -202,9 +292,23 @@ fn batcher_loop(
                             Json::Num(job.arrived.elapsed().as_secs_f64() * 1e3),
                         ),
                         ("batched_with", Json::Num(n_batched as f64)),
+                        (
+                            "stages",
+                            Json::obj(vec![
+                                ("queue_wait_ms", Json::Num(queue_wait_ms)),
+                                ("featurize_ms", Json::Num(featurize_ms)),
+                                (
+                                    "score_ms",
+                                    Json::Num(score_elapsed.as_secs_f64() * 1e3),
+                                ),
+                            ]),
+                        ),
                     ])
                 }
-                Err(e) => Json::obj(vec![("error", Json::Str(format!("score: {e}")))]),
+                Err(e) => {
+                    crate::counter!("serve.errors_total").inc();
+                    Json::obj(vec![("error", Json::Str(format!("score: {e}")))])
+                }
             };
             let _ = job.reply.send(resp);
             served += 1;
@@ -242,6 +346,17 @@ pub fn request(addr: std::net::SocketAddr, id: i64, k: usize, m: &Csr) -> Result
     let mut line = String::new();
     reader.read_line(&mut line)?;
     Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+/// Fetch a live telemetry snapshot from a running service via the
+/// `{"stats": true}` control request.
+pub fn request_stats(addr: std::net::SocketAddr) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{}", Json::obj(vec![("stats", Json::Bool(true))]).to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(&line).map_err(|e| anyhow::anyhow!("bad stats response: {e}"))
 }
 
 /// Turn a request matrix into the record shape used by offline eval —

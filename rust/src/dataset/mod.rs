@@ -75,18 +75,30 @@ impl Dataset {
         order.sort_by_key(|&i| std::cmp::Reverse(matrices[i].matrix.nnz()));
         let collected = par_map(&order, threads, |_, &mi| {
             let info = &matrices[mi];
+            let t_eval = std::time::Instant::now();
             let costs = platform.eval_all(&info.matrix, op);
-            MatrixRecord {
+            let eval_secs = t_eval.elapsed().as_secs_f64();
+            crate::histogram!("dataset.matrix_eval_us").observe_duration(t_eval.elapsed());
+            let rec = MatrixRecord {
                 name: info.name.clone(),
                 dmap: density_map(&info.matrix),
                 cols: info.matrix.cols,
                 rows: info.matrix.rows,
                 nnz: info.matrix.nnz(),
                 costs,
-            }
+            };
+            (rec, eval_secs)
         });
+        // LPT dispatch skew: how much more the heaviest matrix cost than
+        // the mean — the quantity LPT ordering exists to hide.
+        let evals: Vec<f64> = collected.iter().map(|(_, s)| *s).collect();
+        let mean = evals.iter().sum::<f64>() / evals.len().max(1) as f64;
+        let max = evals.iter().cloned().fold(0.0f64, f64::max);
+        if mean > 0.0 {
+            crate::gauge!("dataset.lpt_skew").set(max / mean);
+        }
         let mut slots: Vec<Option<MatrixRecord>> = (0..matrices.len()).map(|_| None).collect();
-        for (&mi, rec) in order.iter().zip(collected) {
+        for (&mi, (rec, _)) in order.iter().zip(collected) {
             slots[mi] = Some(rec);
         }
         let records = slots.into_iter().map(|s| s.expect("record collected")).collect();

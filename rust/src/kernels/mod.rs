@@ -59,6 +59,17 @@ pub fn nnz_balanced_partition(indptr: &[usize], parts: usize) -> Vec<usize> {
         bounds.push(row);
     }
     bounds.push(rows);
+    // Telemetry: max-part / ideal-share load ratio (1.0 = perfectly
+    // balanced; >1 means one thread carries that multiple of its share).
+    if total > 0 && parts > 1 {
+        let max_part = bounds
+            .windows(2)
+            .map(|w| indptr[w[1]] - indptr[w[0]])
+            .max()
+            .unwrap_or(0);
+        let ideal = total as f64 / parts as f64;
+        crate::gauge!("kernels.partition_imbalance").set(max_part as f64 / ideal);
+    }
     bounds
 }
 

@@ -1,6 +1,8 @@
 //! `cognate` CLI entrypoint — see `cognate help`.
 
 fn main() {
+    // COGNATE_LOG=quiet|warn|info|debug (or 0-3) sets stderr verbosity.
+    cognate::util::logger::init_from_env();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = cognate::cli::main_inner(&argv) {
         eprintln!("error: {e:#}");

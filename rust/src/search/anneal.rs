@@ -86,6 +86,8 @@ pub fn anneal<S: Scorer>(platform: PlatformId, scorer: &mut S, opts: &AnnealOpts
     let mut best_index = 0usize;
     let mut best_score = f64::NEG_INFINITY;
     let mut evaluations = 0usize;
+    let mut accepts = 0usize;
+    let mut proposals = 0usize;
     let mut trajectory = Vec::with_capacity(opts.steps * opts.restarts.max(1));
     for restart in 0..opts.restarts.max(1) {
         let mut cur = rng.next_usize(n);
@@ -103,7 +105,9 @@ pub fn anneal<S: Scorer>(platform: PlatformId, scorer: &mut S, opts: &AnnealOpts
             evaluations += 1;
             let accept = cand_score >= cur_score
                 || rng.next_f64() < ((cand_score - cur_score) / temp.max(1e-12)).exp();
+            proposals += 1;
             if accept {
+                accepts += 1;
                 cur = cand;
                 cur_score = cand_score;
             }
@@ -114,6 +118,11 @@ pub fn anneal<S: Scorer>(platform: PlatformId, scorer: &mut S, opts: &AnnealOpts
             trajectory.push(best_score);
         }
     }
+    crate::counter!("sa.evals_total").add(evaluations as u64);
+    if proposals > 0 {
+        crate::gauge!("sa.accept_rate").set(accepts as f64 / proposals as f64);
+    }
+    crate::gauge!("sa.best_score").set(best_score);
     AnnealResult { best_index, best_score, evaluations, trajectory }
 }
 
@@ -153,7 +162,7 @@ where
             ..opts.clone()
         };
         let mut local = |i: usize| scorer(i);
-        anneal(platform, &mut local, &chain_opts)
+        crate::time_span!("sa.chain_us", anneal(platform, &mut local, &chain_opts))
     });
 
     let mut best_index = 0usize;

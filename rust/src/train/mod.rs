@@ -239,6 +239,7 @@ pub fn train(
     for epoch in 0..opts.epochs {
         let mut loss_sum = 0f64;
         for _ in 0..opts.batches_per_epoch {
+            let t_sample = std::time::Instant::now();
             let mut batch = TrainBatch {
                 dmap: vec![0f32; b * dmap_len],
                 cfg_a: vec![0f32; b * cfg_dim],
@@ -280,9 +281,13 @@ pub fn train(
                 };
                 batch.weight[row] = if d == 0.0 { 0.0 } else { 1.0 };
             }
-            loss_sum += driver.train_step(&batch)? as f64;
+            crate::histogram!("train.pair_sample_us").observe_duration(t_sample.elapsed());
+            let step_loss = crate::time_span!("train.step_us", driver.train_step(&batch)?);
+            crate::counter!("train.steps_total").inc();
+            loss_sum += step_loss as f64;
         }
         let train_loss = loss_sum / opts.batches_per_epoch as f64;
+        crate::gauge!("train.loss").set(train_loss);
 
         // ---- validation ranking metrics --------------------------------
         let (mut prl, mut opa, mut ktau) = (f64::NAN, f64::NAN, f64::NAN);
@@ -313,6 +318,9 @@ pub fn train(
             prl = stats::mean(&prls);
             opa = stats::mean(&opas);
             ktau = stats::mean(&ktaus);
+            crate::gauge!("train.val_prl").set(prl);
+            crate::gauge!("train.val_opa").set(opa);
+            crate::gauge!("train.val_ktau").set(ktau);
         }
         if opts.log_every > 0 && epoch % opts.log_every == 0 {
             crate::info!(

@@ -11,6 +11,31 @@ pub fn set_level(level: u8) {
     LEVEL.store(level, Ordering::Relaxed);
 }
 
+/// Parse a verbosity spec: `quiet|warn|info|debug` or `0`–`3`.
+pub fn parse_level(s: &str) -> Option<u8> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "quiet" | "0" => Some(0),
+        "warn" | "1" => Some(1),
+        "info" | "2" => Some(2),
+        "debug" | "3" => Some(3),
+        _ => None,
+    }
+}
+
+/// Set the initial verbosity from the `COGNATE_LOG` env var, if set —
+/// lets the serve demo and CI raise/lower log level without code
+/// changes. Unrecognised values warn and leave the default in place.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("COGNATE_LOG") {
+        match parse_level(&v) {
+            Some(l) => set_level(l),
+            None => eprintln!(
+                "COGNATE_LOG={v:?} not recognised (use quiet|warn|info|debug or 0-3)"
+            ),
+        }
+    }
+}
+
 pub fn level() -> u8 {
     LEVEL.load(Ordering::Relaxed)
 }
@@ -49,6 +74,17 @@ mod tests {
         set_level(3);
         assert_eq!(level(), 3);
         set_level(old);
+    }
+
+    #[test]
+    fn parse_level_specs() {
+        assert_eq!(parse_level("quiet"), Some(0));
+        assert_eq!(parse_level("WARN"), Some(1));
+        assert_eq!(parse_level("info"), Some(2));
+        assert_eq!(parse_level("3"), Some(3));
+        assert_eq!(parse_level(" debug "), Some(3));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level("7"), None);
     }
 
     #[test]

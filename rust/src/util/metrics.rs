@@ -1,0 +1,521 @@
+//! Lock-free telemetry substrate: a global registry of named counters,
+//! gauges, and fixed-bucket (log2) histograms, all backed by
+//! `AtomicU64` with `Relaxed` ordering.
+//!
+//! Design constraints (the whole point of this module):
+//! * **No locks and no allocation after registration.** The registry's
+//!   `Mutex` is touched exactly once per call site: the `counter!` /
+//!   `gauge!` / `histogram!` macros cache the `&'static` handle in a
+//!   per-call-site `OnceLock`, so the hot path is one atomic load plus
+//!   one `fetch_add` (single-digit nanoseconds — `bench_metrics`
+//!   enforces < 50ns and `scripts/verify.sh` runs it as a gate).
+//! * **Registration is idempotent.** Two call sites naming the same
+//!   metric share one leaked cell, so `serve.jobs_total` can be bumped
+//!   from anywhere and snapshot once.
+//! * **Snapshots are best-effort consistent.** Reads are not atomic
+//!   across metrics; a snapshot taken while updates are in flight may
+//!   see a counter and its histogram momentarily out of step. Callers
+//!   that assert exact invariants (tests) must quiesce first.
+//!
+//! Histograms bucket by log2 of the observed value — by convention
+//! microseconds for latency (`*_us` names) and raw counts otherwise —
+//! so 64 buckets cover the full `u64` range with no configuration and
+//! no allocation. Quantiles are approximate (geometric bucket
+//! midpoints), which is plenty for "where does the time go".
+//!
+//! Span timing: `time_span!("stage.us", { work })` observes the block's
+//! wall time into the named histogram and returns the block's value;
+//! `Span::new` is the RAII form for early-return-heavy code.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+// ---- metric cells ---------------------------------------------------------
+
+/// Monotone event count.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Last-writer-wins `f64` value (stored as bits in an `AtomicU64`).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        // 0u64 is the bit pattern of 0.0f64.
+        Gauge { bits: AtomicU64::new(0) }
+    }
+    #[inline]
+    pub fn set(&self, x: f64) {
+        self.bits.store(x.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+    pub fn reset(&self) {
+        self.set(0.0);
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Number of log2 buckets: bucket 0 holds the value 0, bucket `i` (≥ 1)
+/// holds values in `[2^(i-1), 2^i)`; the top bucket also absorbs the
+/// overflow tail.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Fixed-bucket log2 histogram of `u64` observations.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [ZERO; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Observe a duration in microseconds (the repo-wide convention for
+    /// `*_us` histogram names).
+    #[inline]
+    pub fn observe_duration(&self, d: Duration) {
+        self.observe(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile: the geometric midpoint of the bucket where
+    /// the cumulative count crosses `q`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_mid(i);
+            }
+        }
+        bucket_mid(HIST_BUCKETS - 1)
+    }
+
+    /// Upper bound of the highest non-empty bucket (0 when empty).
+    pub fn max_bound(&self) -> u64 {
+        let mut hi = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            if b.load(Ordering::Relaxed) > 0 && i > 0 {
+                hi = (1u64 << i).wrapping_sub(1);
+            }
+        }
+        hi
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+
+    /// `{count, sum, mean, p50, p95, max}` — the snapshot JSON shape
+    /// documented in ROADMAP.md.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("sum", Json::Num(self.sum() as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.quantile(0.5))),
+            ("p95", Json::Num(self.quantile(0.95))),
+            ("max", Json::Num(self.max_bound() as f64)),
+        ])
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn bucket_mid(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        (1u64 << (i - 1)) as f64 * std::f64::consts::SQRT_2
+    }
+}
+
+// ---- registry -------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+/// Name → metric map. The `Mutex` guards only registration and
+/// snapshotting; handles returned from `counter`/`gauge`/`histogram`
+/// are `&'static` and never re-enter the lock.
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub const fn new() -> Registry {
+        Registry { metrics: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        let mut m = self.metrics.lock().unwrap();
+        let e = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Box::leak(Box::new(Counter::new()))));
+        match *e {
+            Metric::Counter(c) => c,
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        let mut m = self.metrics.lock().unwrap();
+        let e = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Box::leak(Box::new(Gauge::new()))));
+        match *e {
+            Metric::Gauge(g) => g,
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> &'static Histogram {
+        let mut m = self.metrics.lock().unwrap();
+        let e = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Box::leak(Box::new(Histogram::new()))));
+        match *e {
+            Metric::Histogram(h) => h,
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    }
+
+    /// Full snapshot as sorted JSON:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
+    pub fn snapshot(&self) -> Json {
+        let m = self.metrics.lock().unwrap();
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut hists = BTreeMap::new();
+        for (name, v) in m.iter() {
+            match *v {
+                Metric::Counter(c) => {
+                    counters.insert(name.clone(), Json::Num(c.get() as f64));
+                }
+                Metric::Gauge(g) => {
+                    gauges.insert(name.clone(), Json::Num(g.get()));
+                }
+                Metric::Histogram(h) => {
+                    hists.insert(name.clone(), h.snapshot());
+                }
+            }
+        }
+        Json::Obj(BTreeMap::from([
+            ("counters".to_string(), Json::Obj(counters)),
+            ("gauges".to_string(), Json::Obj(gauges)),
+            ("histograms".to_string(), Json::Obj(hists)),
+        ]))
+    }
+
+    /// Zero every registered metric (tests / between-run hygiene).
+    /// Handles stay valid — cells are reset, not replaced.
+    pub fn reset_all(&self) {
+        let m = self.metrics.lock().unwrap();
+        for v in m.values() {
+            match *v {
+                Metric::Counter(c) => c.reset(),
+                Metric::Gauge(g) => g.reset(),
+                Metric::Histogram(h) => h.reset(),
+            }
+        }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-global registry every macro and snapshot consumer uses.
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::new)
+}
+
+// ---- span timing ----------------------------------------------------------
+
+/// RAII span: observes elapsed wall time (µs) into `hist` on drop.
+/// Prefer `time_span!` for straight-line blocks; use this where early
+/// returns or `?` would skip a manual observe.
+pub struct Span {
+    hist: &'static Histogram,
+    start: Instant,
+}
+
+impl Span {
+    pub fn new(hist: &'static Histogram) -> Span {
+        Span { hist, start: Instant::now() }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        self.hist.observe_duration(self.start.elapsed());
+    }
+}
+
+// ---- macros ---------------------------------------------------------------
+
+/// `counter!("serve.jobs_total")` → `&'static Counter`, registered once
+/// per call site (the `OnceLock` makes the steady state lock-free).
+#[macro_export]
+macro_rules! counter {
+    ($name:expr) => {{
+        static __HANDLE: std::sync::OnceLock<&'static $crate::util::metrics::Counter> =
+            std::sync::OnceLock::new();
+        *__HANDLE.get_or_init(|| $crate::util::metrics::registry().counter($name))
+    }};
+}
+
+/// `gauge!("sa.best_score")` → `&'static Gauge` (see `counter!`).
+#[macro_export]
+macro_rules! gauge {
+    ($name:expr) => {{
+        static __HANDLE: std::sync::OnceLock<&'static $crate::util::metrics::Gauge> =
+            std::sync::OnceLock::new();
+        *__HANDLE.get_or_init(|| $crate::util::metrics::registry().gauge($name))
+    }};
+}
+
+/// `histogram!("serve.queue_wait_us")` → `&'static Histogram`.
+#[macro_export]
+macro_rules! histogram {
+    ($name:expr) => {{
+        static __HANDLE: std::sync::OnceLock<&'static $crate::util::metrics::Histogram> =
+            std::sync::OnceLock::new();
+        *__HANDLE.get_or_init(|| $crate::util::metrics::registry().histogram($name))
+    }};
+}
+
+/// Time a block into a named histogram (µs) and return its value:
+/// `let out = time_span!("serve.score_us", { driver.score(...) });`
+#[macro_export]
+macro_rules! time_span {
+    ($name:expr, $body:expr) => {{
+        let __hist = $crate::histogram!($name);
+        let __start = std::time::Instant::now();
+        let __out = $body;
+        __hist.observe_duration(__start.elapsed());
+        __out
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests that assert exact values use either a private `Registry`
+    // or names unique to one test — the global registry is shared with
+    // every other test in this binary.
+
+    #[test]
+    fn register_increment_snapshot_exact_json() {
+        let r = Registry::new();
+        let c = r.counter("t.jobs");
+        c.inc();
+        c.add(2);
+        r.gauge("t.best").set(1.5);
+        assert_eq!(
+            r.snapshot().to_string(),
+            r#"{"counters":{"t.jobs":3},"gauges":{"t.best":1.5},"histograms":{}}"#
+        );
+    }
+
+    #[test]
+    fn same_name_same_cell_across_call_sites() {
+        let a = crate::counter!("metrics.test.shared");
+        let b = crate::counter!("metrics.test.shared");
+        a.inc();
+        b.inc();
+        assert!(std::ptr::eq(a, b), "registry must dedupe by name");
+        assert_eq!(a.get(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_quantiles_and_snapshot() {
+        let r = Registry::new();
+        let h = r.histogram("t.lat");
+        for v in [0u64, 1, 2, 3, 1000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1006);
+        assert!((h.mean() - 201.2).abs() < 1e-9);
+        let p50 = h.quantile(0.5);
+        assert!((1.0..=4.0).contains(&p50), "p50 {p50}");
+        let p95 = h.quantile(0.95);
+        assert!((512.0..=1024.0).contains(&p95), "p95 {p95}");
+        assert!(h.max_bound() >= 1000);
+        let snap = h.snapshot();
+        assert_eq!(snap.req("count").as_f64(), Some(5.0));
+        assert_eq!(snap.req("sum").as_f64(), Some(1006.0));
+        // Quantiles are monotone in q.
+        assert!(h.quantile(0.95) >= h.quantile(0.5));
+    }
+
+    #[test]
+    fn histogram_zero_and_large_values() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        assert_eq!(h.max_bound(), 0);
+        h.observe(0);
+        assert_eq!(h.quantile(0.99), 0.0, "all-zero observations");
+        h.observe(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.max_bound() > 1u64 << 62);
+    }
+
+    #[test]
+    fn concurrent_increments_are_exact() {
+        let c = crate::counter!("metrics.test.concurrent");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn gauge_roundtrips_f64() {
+        let g = crate::gauge!("metrics.test.gauge");
+        g.set(-2.25);
+        assert_eq!(g.get(), -2.25);
+        g.set(f64::INFINITY);
+        assert_eq!(g.get(), f64::INFINITY);
+    }
+
+    #[test]
+    fn time_span_records_and_returns_value() {
+        let v = crate::time_span!("metrics.test.span_us", { 2 + 2 });
+        assert_eq!(v, 4);
+        assert_eq!(crate::histogram!("metrics.test.span_us").count(), 1);
+    }
+
+    #[test]
+    fn raii_span_observes_on_drop() {
+        let h = crate::histogram!("metrics.test.raii_us");
+        {
+            let _s = Span::new(h);
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn reset_all_zeroes_but_keeps_handles() {
+        let r = Registry::new();
+        let c = r.counter("t.c");
+        let h = r.histogram("t.h");
+        c.add(5);
+        h.observe(9);
+        r.reset_all();
+        assert_eq!(c.get(), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0);
+        c.inc();
+        assert_eq!(c.get(), 1, "handle stays live after reset");
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn type_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("t.x");
+        r.gauge("t.x");
+    }
+}

@@ -1,10 +1,12 @@
 //! Self-contained substrates: PRNG, JSON, statistics, thread pool,
-//! tables/CSV, logging, and a bench harness. The offline build has only
-//! `xla` + `anyhow` as external crates, so everything else lives here.
+//! tables/CSV, logging, telemetry metrics, and a bench harness. The
+//! offline build has only `xla` + `anyhow` as external crates, so
+//! everything else lives here.
 
 pub mod bench;
 pub mod json;
 pub mod logger;
+pub mod metrics;
 pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -52,6 +52,7 @@ where
     if n == 0 {
         return Vec::new();
     }
+    crate::counter!("pool.tasks_total").add(n as u64);
     let threads = threads.max(1).min(n);
     if threads == 1 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
@@ -60,6 +61,9 @@ where
     let cursor = AtomicUsize::new(0);
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let out_ptr = SendPtr(slots.as_mut_ptr());
+    // Dispatch timestamp: each claim observes how long the task sat in
+    // the (virtual) queue before a worker picked it up.
+    let dispatched = std::time::Instant::now();
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -71,6 +75,7 @@ where
                 if i >= n {
                     break;
                 }
+                crate::histogram!("pool.task_wait_us").observe_duration(dispatched.elapsed());
                 let r = f(i, &items[i]);
                 // SAFETY: `i` was claimed exclusively via fetch_add and
                 // is < n, so this write targets a distinct in-bounds

@@ -1,0 +1,205 @@
+//! Service-level integration: telemetry consistency of the `{"stats":
+//! true}` surface, the jobs-based shutdown contract, and the error
+//! paths of the JSON-lines protocol. Requires `make artifacts`.
+//!
+//! All tests in this binary share the process-global metrics registry
+//! (and the jobs/queue-wait invariant is asserted over registry
+//! totals), so they serialize on one mutex and only read metrics while
+//! every server they started is quiescent.
+
+use cognate::config::PlatformId;
+use cognate::coordinator::{serve, Pipeline, Scale};
+use cognate::model::ModelDriver;
+use cognate::train::ZEncoder;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::Duration;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn micro_scale() -> Scale {
+    let mut s = Scale::small();
+    s.per_cell = 1;
+    s.max_dim = 640;
+    s.seed = 0xBEEF;
+    s
+}
+
+/// Start a service with an untrained (but fully initialised) model —
+/// scoring quality is irrelevant here, only the protocol and telemetry.
+fn start_server(max_jobs: Option<usize>) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let pipe = Pipeline::new(micro_scale()).expect("artifacts present");
+    let driver = ModelDriver::init(pipe.rt.clone(), "cognate", 1).unwrap();
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve::serve(driver, ZEncoder::Zero, PlatformId::Spade, "127.0.0.1:0", max_jobs, move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    (addr, handle)
+}
+
+fn test_matrix(seed: u64) -> cognate::sparse::Csr {
+    cognate::sparse::gen::generate(cognate::sparse::gen::Family::Rmat, 300, 300, 0.02, seed)
+}
+
+/// One raw protocol exchange: send `line`, read one reply line.
+fn raw_roundtrip(addr: SocketAddr, line: &str) -> cognate::util::json::Json {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    writeln!(stream, "{line}").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    cognate::util::json::Json::parse(&reply).expect("reply must be well-formed JSON")
+}
+
+#[test]
+fn stats_snapshot_counters_consistent_after_serving() {
+    let _g = SERIAL.lock().unwrap();
+    let (addr, _server) = start_server(None);
+
+    // Two scoring requests (sequential connections — the counts matter
+    // here, not the batching).
+    for id in 0..2 {
+        let resp = serve::request(addr, id, 5, &test_matrix(id as u64)).unwrap();
+        assert!(resp.get("error").is_none(), "server error: {}", resp.to_string());
+        // Per-response stage breakdown rides along with every answer.
+        let stages = resp.req("stages");
+        for key in ["queue_wait_ms", "featurize_ms", "score_ms"] {
+            assert!(stages.req(key).as_f64().unwrap() >= 0.0, "bad {key}");
+        }
+    }
+
+    // Both replies are in hand, so the batcher recorded both jobs:
+    // the snapshot must show them, and the queue-wait histogram must
+    // have recorded exactly one observation per dequeued job.
+    let snap = serve::request_stats(addr).unwrap();
+    let jobs = snap.req("counters").req("serve.jobs_total").as_usize().unwrap();
+    assert!(jobs >= 2, "jobs_total {jobs} < 2");
+    let qcount = snap
+        .req("histograms")
+        .req("serve.queue_wait_us")
+        .req("count")
+        .as_usize()
+        .unwrap();
+    assert_eq!(qcount, jobs, "queue-wait observations must match jobs served");
+    let batches = snap
+        .req("histograms")
+        .req("serve.batch_size")
+        .req("count")
+        .as_usize()
+        .unwrap();
+    assert!(batches >= 1 && batches <= jobs, "batches {batches} vs jobs {jobs}");
+    assert!(
+        snap.req("counters").req("serve.stats_requests_total").as_usize().unwrap() >= 1
+    );
+    // Server stays up (max_jobs: None); thread is left running and the
+    // process reaps it at exit.
+}
+
+#[test]
+fn max_jobs_counts_jobs_not_connections() {
+    let _g = SERIAL.lock().unwrap();
+    // Seed regression: the acceptor used to count *connections* against
+    // the budget, so one connection issuing 3 requests left serve()
+    // blocked forever waiting for 2 more connections. Now the batcher's
+    // job count drives shutdown and serve() must return.
+    let (addr, server) = start_server(Some(3));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let m = test_matrix(7);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for id in 0..3 {
+        let mut coo = Vec::new();
+        for r in 0..m.rows {
+            for (&c, &v) in m.row_indices(r).iter().zip(m.row_values(r)) {
+                coo.push(format!("[{r},{c},{v}]"));
+            }
+        }
+        writeln!(
+            stream,
+            "{{\"id\":{id},\"k\":3,\"rows\":{},\"cols\":{},\"coo\":[{}]}}",
+            m.rows,
+            m.cols,
+            coo.join(",")
+        )
+        .unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let resp = cognate::util::json::Json::parse(&reply).unwrap();
+        assert!(resp.get("error").is_none(), "job {id}: {}", resp.to_string());
+        assert_eq!(resp.req("top").as_arr().unwrap().len(), 3);
+    }
+    drop(stream);
+    // The whole service must wind down off the job budget alone.
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = server.join();
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("serve() must return once max_jobs jobs are served");
+}
+
+#[test]
+fn malformed_requests_get_json_error_replies() {
+    let _g = SERIAL.lock().unwrap();
+    let (addr, _server) = start_server(None);
+
+    // Not JSON at all.
+    let r = raw_roundtrip(addr, "this is not json");
+    assert!(r.req("error").as_str().unwrap().contains("bad request"));
+
+    // Valid JSON, missing required fields.
+    let r = raw_roundtrip(addr, r#"{"id": 1, "k": 3}"#);
+    assert!(r.req("error").as_str().unwrap().contains("rows"));
+
+    // coo entry outside the declared shape.
+    let r = raw_roundtrip(addr, r#"{"rows": 4, "cols": 4, "coo": [[9, 0, 1.0]]}"#);
+    assert!(r.req("error").as_str().unwrap().contains("out of bounds"));
+
+    // Errors were counted.
+    let snap = serve::request_stats(addr).unwrap();
+    assert!(snap.req("counters").req("serve.errors_total").as_usize().unwrap() >= 3);
+}
+
+#[test]
+fn request_after_job_budget_exhausted_gets_error_reply() {
+    let _g = SERIAL.lock().unwrap();
+    let (addr, server) = start_server(Some(1));
+    // Keep one connection open across the budget boundary.
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // Job 1 consumes the whole budget.
+    writeln!(writer, r#"{{"id":1,"k":2,"rows":2,"cols":2,"coo":[[0,0,1.0],[1,1,1.0]]}}"#)
+        .unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let resp = cognate::util::json::Json::parse(&reply).unwrap();
+    assert!(resp.get("error").is_none(), "first job failed: {}", resp.to_string());
+
+    // A second request on the same connection races the batcher's exit:
+    // whichever way the race lands, the reply must be well-formed JSON
+    // with an "error" field (never a hang, never a dropped connection).
+    writeln!(writer, r#"{{"id":2,"k":2,"rows":2,"cols":2,"coo":[[0,1,1.0]]}}"#).unwrap();
+    let mut reply2 = String::new();
+    reader.read_line(&mut reply2).unwrap();
+    let resp2 = cognate::util::json::Json::parse(&reply2)
+        .expect("post-shutdown reply must still be JSON");
+    assert!(resp2.get("error").is_some(), "expected error, got {}", resp2.to_string());
+
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = server.join();
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("serve() must return after the budget is spent");
+}
