@@ -2,7 +2,11 @@
 //! quickly fine-tuned model and fire concurrent client requests at it,
 //! reporting latency and batching behaviour.
 //!
-//!   cargo run --release --example serve_demo [-- --metrics-out PATH]
+//!   cargo run --release --example serve_demo [-- --shards S] [--metrics-out PATH]
+//!
+//! `--shards S` (or `COGNATE_SHARDS=S`, default 2) sets the number of
+//! batcher shards behind the least-loaded router; each runs its own
+//! adaptive linger controller.
 //!
 //! With `--metrics-out PATH` (or `COGNATE_METRICS_OUT=PATH`), writes
 //! the process-global telemetry snapshot as JSON after the run — the
@@ -33,14 +37,24 @@ fn main() -> Result<()> {
     train(&mut driver, &zenc, &tgt, &ft, &[], &pipe.scale.pretrain_opts.clone())?;
 
     let n_clients = 8;
+    let argv: Vec<String> = std::env::args().collect();
+    let shards = argv
+        .iter()
+        .position(|a| a == "--shards")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .or_else(|| std::env::var("COGNATE_SHARDS").ok().and_then(|s| s.parse().ok()))
+        .unwrap_or(2usize)
+        .max(1);
+    let opts = serve::ServeOpts { shards, max_jobs: Some(n_clients), ..serve::ServeOpts::default() };
     let (addr_tx, addr_rx) = std::sync::mpsc::channel();
     let server = std::thread::spawn(move || {
-        serve::serve(driver, zenc, target, "127.0.0.1:0", Some(n_clients), move |a| {
+        serve::serve(driver, zenc, target, "127.0.0.1:0", opts, move |a| {
             let _ = addr_tx.send(a);
         })
     });
     let addr = addr_rx.recv()?;
-    println!("service up on {addr}; firing {n_clients} concurrent requests");
+    println!("service up on {addr} ({shards} shards); firing {n_clients} concurrent requests");
 
     let t0 = std::time::Instant::now();
     let clients: Vec<_> = (0..n_clients)
@@ -75,7 +89,6 @@ fn main() -> Result<()> {
     let _ = server.join().unwrap();
 
     // Telemetry snapshot: --metrics-out PATH beats COGNATE_METRICS_OUT.
-    let argv: Vec<String> = std::env::args().collect();
     let metrics_out = argv
         .iter()
         .position(|a| a == "--metrics-out")

@@ -1,0 +1,205 @@
+//! Serve-path A/B: single batcher + fixed linger (the seed shape) vs
+//! sharded batchers + adaptive linger, under a bursty multi-connection
+//! load. The model behind each shard is synthetic (sleep-based
+//! featurize/score), so the bench isolates *batching policy* — router,
+//! queues, linger controller — from PJRT, needs no artifacts, and lets
+//! shards genuinely overlap (the real runtime serialises executions on
+//! an internal lock; the win there comes from the linger policy and
+//! overlapping the non-PJRT work).
+//!
+//! Gate: p95 `serve.queue_wait_us` must improve with 4 shards +
+//! adaptive linger vs 1 shard + fixed 8ms. With 8 connections, each
+//! with one request in flight, a FEAT_B=16 batch can never fill, so
+//! the fixed window makes every job eat the full 8ms linger — the
+//! adaptive controller's shrink rule is exactly what removes it.
+//!
+//! Results land in `BENCH_serve.json` at the repo root (override with
+//! `BENCH_OUT`).
+
+use cognate::coordinator::serve::{self, LingerPolicy, ServeModel, ServeOpts};
+use cognate::sparse::gen::{generate, Family};
+use cognate::util::json::Json;
+use cognate::util::metrics::registry;
+use std::io::{BufRead, BufReader, Write};
+use std::time::{Duration, Instant};
+
+/// Featurizer batch width: above the max in-flight job count (8
+/// connections × 1 outstanding each) so fixed-linger batches never
+/// fill early.
+const FEAT_B: usize = 16;
+/// One synthetic featurize call (per batch — the amortisable cost).
+const FEATURIZE_COST: Duration = Duration::from_millis(3);
+/// One synthetic scoring call (per job).
+const SCORE_COST: Duration = Duration::from_micros(200);
+const FIXED_LINGER: Duration = Duration::from_millis(8);
+
+const N_CONNS: usize = 8;
+const BURSTS: usize = 4;
+const BURST_LEN: usize = 4;
+const BURST_GAP: Duration = Duration::from_millis(6);
+const TOTAL_JOBS: usize = N_CONNS * BURSTS * BURST_LEN;
+
+struct SyntheticModel;
+
+impl ServeModel for SyntheticModel {
+    fn feat_b(&self) -> usize {
+        FEAT_B
+    }
+    fn featurize(&mut self, dmaps: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(FEATURIZE_COST);
+        Ok(dmaps.iter().map(|_| vec![0.0; 8]).collect())
+    }
+    fn score(&mut self, _embed: &[f32], _cols: usize) -> anyhow::Result<Vec<f64>> {
+        std::thread::sleep(SCORE_COST);
+        Ok((0..64).map(|i| i as f64).collect())
+    }
+}
+
+struct LoadStats {
+    p50_us: f64,
+    p95_us: f64,
+    mean_us: f64,
+    wall_ms: f64,
+    batches: usize,
+}
+
+/// Drive TOTAL_JOBS bursty jobs through a service with `shards`
+/// synthetic shards under `linger`, and read the queue-wait
+/// distribution back out of the (reset) global registry.
+fn run_load(shards: usize, linger: LingerPolicy) -> LoadStats {
+    registry().reset_all();
+    let models: Vec<Box<dyn ServeModel>> =
+        (0..shards).map(|_| Box::new(SyntheticModel) as Box<dyn ServeModel>).collect();
+    let opts = ServeOpts { shards, linger, max_jobs: Some(TOTAL_JOBS), ..ServeOpts::default() };
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve::serve_models(models, "127.0.0.1:0", opts, move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .expect("serve_models");
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).expect("server ready");
+
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..N_CONNS)
+        .map(|conn| {
+            std::thread::spawn(move || {
+                // One persistent connection per client, bursts of
+                // request/reply cycles separated by idle gaps.
+                let m = generate(Family::Banded, 100, 100, 0.05, conn as u64);
+                let stream = std::net::TcpStream::connect(addr).expect("connect");
+                let mut writer = stream.try_clone().expect("clone");
+                let mut reader = BufReader::new(stream);
+                for burst in 0..BURSTS {
+                    for j in 0..BURST_LEN {
+                        let id = (conn * BURSTS * BURST_LEN + burst * BURST_LEN + j) as i64;
+                        writeln!(writer, "{}", serve::request_payload(id, 3, &m)).expect("send");
+                        let mut reply = String::new();
+                        reader.read_line(&mut reply).expect("reply");
+                        let resp = Json::parse(&reply).expect("reply JSON");
+                        assert!(
+                            resp.get("error").is_none(),
+                            "server error: {}",
+                            resp.to_string()
+                        );
+                    }
+                    if burst + 1 < BURSTS {
+                        std::thread::sleep(BURST_GAP);
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client");
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    server.join().expect("server joins once the job budget is spent");
+
+    let snap = registry().snapshot();
+    let jobs = snap.req("counters").req("serve.jobs_total").as_usize().expect("jobs_total");
+    let q = snap.req("histograms").req("serve.queue_wait_us");
+    let qcount = q.req("count").as_usize().expect("count");
+    assert_eq!(jobs, TOTAL_JOBS, "every job dequeued exactly once");
+    assert_eq!(qcount, jobs, "queue_wait_us.count == jobs_total at quiescence");
+    let batches =
+        snap.req("histograms").req("serve.batch_size").req("count").as_usize().expect("batches");
+    LoadStats {
+        p50_us: q.req("p50").as_f64().expect("p50"),
+        p95_us: q.req("p95").as_f64().expect("p95"),
+        mean_us: q.req("mean").as_f64().expect("mean"),
+        wall_ms,
+        batches,
+    }
+}
+
+fn repo_root() -> std::path::PathBuf {
+    let start = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut d = start.clone();
+    loop {
+        if d.join("CHANGES.md").exists() || d.join(".git").exists() {
+            return d;
+        }
+        if !d.pop() {
+            return start;
+        }
+    }
+}
+
+fn side_json(s: &LoadStats) -> Json {
+    Json::obj(vec![
+        ("queue_wait_p50_us", Json::Num(s.p50_us)),
+        ("queue_wait_p95_us", Json::Num(s.p95_us)),
+        ("queue_wait_mean_us", Json::Num(s.mean_us)),
+        ("wall_ms", Json::Num(s.wall_ms)),
+        ("batches", Json::Num(s.batches as f64)),
+    ])
+}
+
+fn main() {
+    println!(
+        "serve A/B: {TOTAL_JOBS} jobs over {N_CONNS} connections \
+         ({BURSTS} bursts × {BURST_LEN}; feat_b={FEAT_B})"
+    );
+
+    let baseline = run_load(1, LingerPolicy::Fixed(FIXED_LINGER));
+    println!(
+        "  1 shard, fixed {FIXED_LINGER:?}: p50={:.0}us p95={:.0}us mean={:.0}us \
+         wall={:.0}ms batches={}",
+        baseline.p50_us, baseline.p95_us, baseline.mean_us, baseline.wall_ms, baseline.batches
+    );
+
+    let sharded = run_load(4, LingerPolicy::adaptive_to(FIXED_LINGER));
+    println!(
+        "  4 shards, adaptive≤{FIXED_LINGER:?}: p50={:.0}us p95={:.0}us mean={:.0}us \
+         wall={:.0}ms batches={}",
+        sharded.p50_us, sharded.p95_us, sharded.mean_us, sharded.wall_ms, sharded.batches
+    );
+
+    let out_json = Json::obj(vec![
+        ("baseline_1shard_fixed", side_json(&baseline)),
+        ("sharded_4shard_adaptive", side_json(&sharded)),
+        ("p95_improvement", Json::Num(baseline.p95_us / sharded.p95_us.max(1.0))),
+        ("total_jobs", Json::Num(TOTAL_JOBS as f64)),
+    ]);
+    let out = std::env::var("BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| repo_root().join("BENCH_serve.json"));
+    std::fs::write(&out, format!("{}\n", out_json.to_string())).expect("write bench json");
+    println!("wrote {}", out.display());
+
+    if sharded.p95_us >= baseline.p95_us {
+        eprintln!(
+            "FAIL: sharded+adaptive p95 queue wait {:.0}us did not improve on the \
+             single-batcher fixed-linger baseline {:.0}us",
+            sharded.p95_us, baseline.p95_us
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "PASS: p95 queue wait {:.0}us → {:.0}us ({:.1}x better)",
+        baseline.p95_us,
+        sharded.p95_us,
+        baseline.p95_us / sharded.p95_us.max(1.0)
+    );
+}

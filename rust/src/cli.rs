@@ -5,7 +5,8 @@
 //!   cognate pretrain   [--op O] [--variant V]      pre-train on CPU, save θ
 //!   cognate experiment <id|all> [--scale N]        regenerate paper tables/figures
 //!   cognate search     [--op O] [--target P]       tune one synthetic matrix end to end
-//!   cognate serve      [--addr A] [--max-jobs N]  run the auto-tuning service
+//!   cognate serve      [--addr A] [--max-jobs N] [--shards S] [--linger-max MS]
+//!                                                run the sharded auto-tuning service
 //!   cognate stats      [--addr A]                 scrape a running service's metrics
 //!   cognate bench-sim                              quick simulator throughput check
 //!
@@ -61,8 +62,28 @@ impl Args {
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
+    /// Flag value with an environment-variable fallback (flag wins).
+    pub fn flag_env(&self, name: &str, env: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .or_else(|| std::env::var(env).ok())
+            .unwrap_or_else(|| default.to_string())
+    }
+    pub fn flag_env_usize(&self, name: &str, env: &str, default: usize) -> usize {
+        self.flag_env(name, env, "").parse().unwrap_or(default)
+    }
+    pub fn flag_env_f64(&self, name: &str, env: &str, default: f64) -> f64 {
+        self.flag_env(name, env, "").parse().unwrap_or(default)
+    }
+    /// `--scale micro` is the smallest runnable shape (used by the CLI
+    /// round-trip test); `--scale N` multiplies toward paper scale.
     pub fn scale(&self) -> Scale {
-        Scale::scaled(self.flag_usize("scale", 1))
+        if self.flags.get("scale").map(|s| s.as_str()) == Some("micro") {
+            Scale::micro()
+        } else {
+            Scale::scaled(self.flag_usize("scale", 1))
+        }
     }
     pub fn op(&self) -> Result<Op> {
         Op::parse(&self.flag("op", "spmm")).context("bad --op (spmm|sddmm)")
@@ -94,8 +115,12 @@ COMMANDS
   search      [--op O] [--target P] [--k K] [--scale N]
                                                tune one synthetic matrix end to end
   serve       [--addr 127.0.0.1:7199] [--target P] [--op O] [--scale N] [--max-jobs N]
-                                               run the batched auto-tuning service
-                                               (--max-jobs N stops after N jobs; 0 = forever)
+              [--shards S] [--linger-max MS]
+                                               run the sharded auto-tuning service
+                                               (--max-jobs N stops after N jobs; 0 = forever;
+                                               --shards S model replicas behind a least-loaded
+                                               router; --linger-max MS caps each shard's
+                                               adaptive batch-coalescing window)
   stats       [--addr 127.0.0.1:7199]          fetch a live telemetry snapshot from a
                                                running service ({\"stats\": true} request)
   help                                         this text
@@ -104,11 +129,18 @@ GLOBAL FLAGS
   --metrics-out PATH    write the telemetry snapshot (counters / gauges /
                         histograms, sorted JSON) when the command exits;
                         if PATH is a directory, writes METRICS_<cmd>.json
+  --results-dir DIR     root for the dataset cache, training telemetry
+                        (metrics_epochs.jsonl) and default outputs
+                        (default: results/)
+  --scale micro|N       micro = smallest runnable shape (tests);
+                        N multiplies the small scale toward paper scale
 
 ENVIRONMENT
   COGNATE_LOG           stderr verbosity: quiet|warn|info|debug (or 0-3);
                         default info
   COGNATE_ARTIFACTS     override the ./artifacts directory
+  COGNATE_SHARDS        default for serve --shards
+  COGNATE_LINGER_MAX    default for serve --linger-max (milliseconds)
 
 Artifacts must exist (run `make artifacts`); set COGNATE_ARTIFACTS to
 override the ./artifacts directory.";
@@ -153,6 +185,16 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
+/// Pipeline at the requested scale, honouring `--results-dir` (dataset
+/// cache, training telemetry, default checkpoint paths all live there).
+fn pipeline_for(args: &Args) -> Result<Pipeline> {
+    let mut pipe = Pipeline::new(args.scale())?;
+    if let Some(dir) = args.flags.get("results-dir") {
+        pipe.results_dir = std::path::PathBuf::from(dir);
+    }
+    Ok(pipe)
+}
+
 /// Resolve `--metrics-out` and write the registry snapshot there.
 fn write_metrics_out(args: &Args) -> Result<()> {
     let raw = args.flag("metrics-out", "");
@@ -182,7 +224,7 @@ fn cmd_stats(args: &Args) -> Result<()> {
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
-    let mut pipe = Pipeline::new(args.scale())?;
+    let mut pipe = pipeline_for(args)?;
     let coll = pipe.collection();
     let mut t = crate::util::table::Table::new(
         "matrix collection",
@@ -204,7 +246,7 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn cmd_collect(args: &Args) -> Result<()> {
-    let mut pipe = Pipeline::new(args.scale())?;
+    let mut pipe = pipeline_for(args)?;
     let platform = args.platform("platform", "spade")?;
     let op = args.op()?;
     let ds = pipe.dataset(platform, op)?;
@@ -223,7 +265,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .positional
         .first()
         .context("experiment id required (or `all`)")?;
-    let mut pipe = Pipeline::new(args.scale())?;
+    let mut pipe = pipeline_for(args)?;
     if which == "all" {
         experiments::run_all(&mut pipe)?;
     } else {
@@ -239,7 +281,7 @@ fn cmd_search(args: &Args) -> Result<()> {
     use crate::sparse::gen::{generate, Family};
     use crate::train::train;
 
-    let mut pipe = Pipeline::new(args.scale())?;
+    let mut pipe = pipeline_for(args)?;
     let op = args.op()?;
     let target = args.platform("target", "spade")?;
     let k = args.flag_usize("k", 5);
@@ -280,16 +322,30 @@ fn cmd_search(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::serve::{LingerPolicy, ServeOpts};
     use crate::model::ModelDriver;
     use crate::train::train;
 
-    let mut pipe = Pipeline::new(args.scale())?;
+    let mut pipe = pipeline_for(args)?;
     let op = args.op()?;
     let target = args.platform("target", "spade")?;
     let addr = args.flag("addr", "127.0.0.1:7199");
     let max_jobs = match args.flag_usize("max-jobs", 0) {
         0 => None,
         n => Some(n),
+    };
+    let shards = args.flag_env_usize("shards", "COGNATE_SHARDS", 1).max(1);
+    // Adaptive linger cap in milliseconds; guard the Duration
+    // conversion (from_secs_f64 panics on negative / non-finite).
+    let mut linger_ms = args.flag_env_f64("linger-max", "COGNATE_LINGER_MAX", 8.0);
+    if !linger_ms.is_finite() || linger_ms < 0.0 {
+        linger_ms = 8.0;
+    }
+    let opts = ServeOpts {
+        shards,
+        linger: LingerPolicy::adaptive_to(std::time::Duration::from_secs_f64(linger_ms / 1e3)),
+        max_jobs,
+        ..ServeOpts::default()
     };
 
     let src = pipe.dataset(PlatformId::Cpu, op)?;
@@ -304,8 +360,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let zenc = pipe.trained_ae(target, "ae", 2)?;
     train(&mut driver, &zenc, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone())?;
 
-    println!("serving tuned cost model on {addr} (Ctrl-C to stop)");
-    crate::coordinator::serve::serve(driver, zenc, target, &addr, max_jobs, |a| {
+    println!(
+        "serving tuned cost model on {addr} ({shards} shard{}, linger cap {linger_ms}ms; Ctrl-C to stop)",
+        if shards == 1 { "" } else { "s" }
+    );
+    crate::coordinator::serve::serve(driver, zenc, target, &addr, opts, |a| {
         println!("ready on {a}");
     })
 }
@@ -314,7 +373,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     use crate::model::checkpoint::Checkpoint;
     use crate::model::ModelDriver;
     use crate::train::train;
-    let mut pipe = Pipeline::new(args.scale())?;
+    let mut pipe = pipeline_for(args)?;
     let op = args.op()?;
     let variant = args.flag("variant", "cognate");
     let out = args.flag("out", "results/pretrained.ckpt");
@@ -323,7 +382,8 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     let idx = pipe.pretrain_subset(&ds, &pool, pipe.scale.pretrain_matrices);
     let zenc = pipe.trained_ae(PlatformId::Cpu, "ae", 1)?;
     let mut driver = ModelDriver::init(pipe.rt.clone(), &variant, 11)?;
-    let logs = train(&mut driver, &zenc, &ds, &idx, &[], &pipe.scale.pretrain_opts.clone())?;
+    let opts = pipe.train_opts_with_telemetry(&pipe.scale.pretrain_opts);
+    let logs = train(&mut driver, &zenc, &ds, &idx, &[], &opts)?;
     let note = format!(
         "pretrained variant={variant} op={} matrices={} final_loss={:.4}",
         op.name(), idx.len(), logs.last().map(|l| l.train_loss).unwrap_or(f64::NAN)
@@ -336,7 +396,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
 fn cmd_finetune(args: &Args) -> Result<()> {
     use crate::model::checkpoint::Checkpoint;
     use crate::train::train;
-    let mut pipe = Pipeline::new(args.scale())?;
+    let mut pipe = pipeline_for(args)?;
     let op = args.op()?;
     let target = args.platform("target", "spade")?;
     let ckpt_path = args.flags.get("ckpt").context("--ckpt required")?.clone();
@@ -348,7 +408,8 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     let (pool, _) = pipe.splits(&tgt);
     let ft: Vec<usize> = pool.into_iter().take(pipe.scale.finetune_matrices).collect();
     let zenc = pipe.trained_ae(target, "ae", 2)?;
-    train(&mut driver, &zenc, &tgt, &ft, &[], &pipe.scale.finetune_opts.clone())?;
+    let opts = pipe.train_opts_with_telemetry(&pipe.scale.finetune_opts);
+    train(&mut driver, &zenc, &tgt, &ft, &[], &opts)?;
     let note = format!("finetuned on {} ({} matrices) from {ckpt_path}", target.name(), ft.len());
     Checkpoint::from_driver(&driver, &note).save(std::path::Path::new(&out))?;
     println!("wrote {out} ({note})");
@@ -358,7 +419,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     use crate::model::checkpoint::Checkpoint;
     use crate::search::{evaluate, oracle_summary};
-    let mut pipe = Pipeline::new(args.scale())?;
+    let mut pipe = pipeline_for(args)?;
     let op = args.op()?;
     let target = args.platform("target", "spade")?;
     let k = args.flag_usize("k", 5);

@@ -55,7 +55,7 @@ impl<'p> Workbench<'p> {
         let idx = self.pipe.pretrain_subset(&ds, &pool, n_matrices);
         let zenc = self.ae(PlatformId::Cpu, "ae")?;
         let mut driver = ModelDriver::init(self.pipe.rt.clone(), variant, 11)?;
-        let opts = self.pipe.scale.pretrain_opts.clone();
+        let opts = self.pipe.train_opts_with_telemetry(&self.pipe.scale.pretrain_opts);
         crate::info!("pretraining {variant} on cpu/{} with {} matrices", op.name(), idx.len());
         train(&mut driver, &zenc, &ds, &idx, &[], &opts)?;
         let d = Arc::new(driver);

@@ -68,6 +68,33 @@ impl Scale {
         }
     }
 
+    /// Smallest runnable scale: seconds per phase, for integration
+    /// tests and CLI round-trip checks (`--scale micro`).
+    pub fn micro() -> Scale {
+        Scale {
+            per_cell: 1,
+            max_dim: 640,
+            pretrain_matrices: 10,
+            finetune_matrices: 3,
+            eval_matrices: 8,
+            pretrain_opts: TrainOpts {
+                epochs: 3,
+                batches_per_epoch: 10,
+                val_matrices: 0,
+                ..TrainOpts::default()
+            },
+            finetune_opts: TrainOpts {
+                epochs: 2,
+                batches_per_epoch: 6,
+                val_matrices: 0,
+                ..TrainOpts::default()
+            },
+            ae_steps: 60,
+            threads: default_threads(),
+            seed: 0xBEEF,
+        }
+    }
+
     /// Multiply the small scale toward the paper's setup.
     pub fn scaled(factor: usize) -> Scale {
         let mut s = Scale::small();
@@ -207,6 +234,17 @@ impl Pipeline {
             }
         }
         out
+    }
+
+    /// Train options with per-epoch telemetry persistence wired to this
+    /// pipeline's results dir (`metrics_epochs.jsonl`, appended as one
+    /// snapshot line per epoch — the ROADMAP "persist training
+    /// telemetry" surface).
+    pub fn train_opts_with_telemetry(&self, base: &TrainOpts) -> TrainOpts {
+        TrainOpts {
+            metrics_jsonl: Some(self.results_dir.join("metrics_epochs.jsonl")),
+            ..base.clone()
+        }
     }
 
     /// Train the per-target autoencoder (§3.3) and wrap it as a ZEncoder.

@@ -3,16 +3,29 @@
 //! for a target platform — the "cost model as a service" deployment of
 //! the paper's artifact, structured like an inference router:
 //!
-//!   acceptor threads → bounded job queue → ONE batcher thread that
-//!   coalesces up to FEAT_B featurizations per PJRT call (dynamic
-//!   batching with a small linger window) → per-job top-k scoring →
-//!   reply channels.
+//!   acceptor threads → least-loaded router → N shard batchers, each
+//!   owning a `ModelDriver` replica and a bounded queue, each
+//!   coalescing up to FEAT_B featurizations per PJRT call (dynamic
+//!   batching with a per-shard adaptive linger window) → per-job top-k
+//!   scoring → reply channels.
+//!
+//! Routing: the router sorts shards by queue depth (queued + in-flight
+//! jobs) and `try_send`s in that order, so one slow featurize call no
+//! longer stalls every connection; if every bounded queue is full it
+//! blocks on the least-loaded shard rather than shedding load.
+//!
+//! Lingering: instead of the fixed `LINGER`, each shard runs an
+//! `AdaptiveLinger` controller — shrink the window when batches fill
+//! before the deadline (lingering is then pure added latency), grow it
+//! toward a cap when batches run near-empty while jobs stack up behind
+//! the shard (a wider window amortises the PJRT call), shrink when
+//! near-empty and idle (don't hold lone jobs hostage).
 //!
 //! Protocol: one JSON object per line.
 //!   request:  {"id": 1, "k": 5, "rows": R, "cols": C,
 //!              "coo": [[r, c, v], ...]}
 //!   response: {"id": 1, "top": [cfg_idx, ...], "scores": [...],
-//!              "latency_ms": ..., "batched_with": n,
+//!              "latency_ms": ..., "batched_with": n, "shard": s,
 //!              "stages": {"queue_wait_ms": ..., "featurize_ms": ...,
 //!                         "score_ms": ...}}
 //!   control:  {"stats": true} → a full `util::metrics` snapshot
@@ -20,22 +33,28 @@
 //!             operators can scrape the live service.
 //!
 //! Telemetry (canonical names in ROADMAP.md "Telemetry"): every job
-//! dequeued by the batcher bumps `serve.jobs_total` and observes
+//! dequeued by ANY shard bumps `serve.jobs_total` and observes
 //! `serve.queue_wait_us` exactly once, so `queue_wait_us.count ==
-//! jobs_total` whenever the service is quiescent. Error replies of any
-//! kind bump `serve.errors_total`.
+//! jobs_total` whenever the service is quiescent — the invariant is
+//! global across shards. Per-shard instanced metrics
+//! (`serve.shard_jobs_total.<i>`, `serve.shard_linger_us.<i>`) are
+//! registered through `registry()` directly, never the macros (a
+//! macro call site caches one name forever). Error replies of any kind
+//! bump `serve.errors_total`.
 
+use crate::config::PlatformId;
 use crate::dataset::MatrixRecord;
 use crate::model::ModelDriver;
 use crate::search::top_k;
 use crate::sparse::features::density_map;
 use crate::sparse::Csr;
-use crate::train::{config_features, ZEncoder};
+use crate::train::{config_features, ConfigFeatures, ZEncoder};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -47,66 +66,471 @@ pub struct Job {
     pub arrived: Instant,
 }
 
-/// Linger window for batch coalescing.
+/// Default (and adaptive-cap) linger window for batch coalescing.
 pub const LINGER: Duration = Duration::from_millis(8);
+/// Floor for the adaptive linger window: below this the coalescing win
+/// is noise next to the syscall + wakeup cost of the wait itself.
+pub const LINGER_MIN: Duration = Duration::from_micros(500);
+/// Bounded per-shard queue depth (backpressure point for the router).
+pub const DEFAULT_QUEUE_CAP: usize = 256;
+/// Idle shards poll the shutdown flag at this interval.
+const SHARD_POLL: Duration = Duration::from_millis(50);
 
-/// Run the service until `max_jobs` *jobs* have been served (`None` =
-/// forever). Both the batcher and the accept loop key off the same job
-/// count: when the batcher exhausts the budget it raises a shutdown
-/// flag and wakes the acceptor, so a single connection sending many
-/// requests consumes the budget exactly like many connections sending
-/// one each. (The seed counted accepted *connections* against
-/// `max_jobs`, which stopped new connections early while the batcher
-/// kept serving.) A batch in flight is always completed, so slightly
-/// more than `max_jobs` jobs may be answered when the last batch
+/// How a shard sizes its batch-coalescing window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LingerPolicy {
+    /// Constant window (the seed behaviour at `Fixed(LINGER)`).
+    Fixed(Duration),
+    /// Histogram-guided controller bounded to `[min, max]`.
+    Adaptive { min: Duration, max: Duration },
+}
+
+impl LingerPolicy {
+    /// Adaptive window in `[LINGER_MIN, max]` (min is clipped to the
+    /// cap so degenerate caps still give a valid range).
+    pub fn adaptive_to(max: Duration) -> LingerPolicy {
+        LingerPolicy::Adaptive { min: LINGER_MIN.min(max), max }
+    }
+}
+
+impl Default for LingerPolicy {
+    fn default() -> Self {
+        LingerPolicy::adaptive_to(LINGER)
+    }
+}
+
+/// Service shape: shard count, linger policy, job budget, queue bound.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    pub shards: usize,
+    pub linger: LingerPolicy,
+    /// Serve until this many *jobs* have been answered (`None` =
+    /// forever). The budget is global across shards.
+    pub max_jobs: Option<usize>,
+    pub queue_cap: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            shards: 1,
+            linger: LingerPolicy::default(),
+            max_jobs: None,
+            queue_cap: DEFAULT_QUEUE_CAP,
+        }
+    }
+}
+
+impl ServeOpts {
+    /// The common test shape: defaults plus a job budget.
+    pub fn with_max_jobs(max_jobs: Option<usize>) -> ServeOpts {
+        ServeOpts { max_jobs, ..ServeOpts::default() }
+    }
+}
+
+/// Per-shard linger controller. The decision inputs are the shard's own
+/// batch outcomes — the same signals the `serve.batch_size` /
+/// `serve.queue_wait_us` histograms record:
+/// * batch filled before the deadline → the window only adds latency →
+///   shrink by 1/4;
+/// * batch ≤ 1/4 full while the first job had already waited at least a
+///   full window before we dequeued it (backlog) → the shard is the
+///   bottleneck and wider coalescing amortises the PJRT call → double;
+/// * batch ≤ 1/4 full with no backlog → traffic is light → shrink so
+///   lone jobs aren't held hostage.
+///
+/// `backlog_wait` must be the first job's arrival→dequeue time measured
+/// BEFORE lingering: `serve.queue_wait_us` itself includes the linger
+/// window, so using it would make every lone job look like load.
+pub struct AdaptiveLinger {
+    policy: LingerPolicy,
+    cur: Duration,
+}
+
+impl AdaptiveLinger {
+    pub fn new(policy: LingerPolicy) -> AdaptiveLinger {
+        let cur = match policy {
+            LingerPolicy::Fixed(d) => d,
+            LingerPolicy::Adaptive { min, .. } => min,
+        };
+        AdaptiveLinger { policy, cur }
+    }
+
+    /// Current coalescing window.
+    pub fn window(&self) -> Duration {
+        self.cur
+    }
+
+    /// Feed one batch outcome into the controller.
+    pub fn on_batch(
+        &mut self,
+        batch_len: usize,
+        feat_b: usize,
+        filled_early: bool,
+        backlog_wait: Duration,
+    ) {
+        let LingerPolicy::Adaptive { min, max } = self.policy else {
+            return;
+        };
+        if filled_early && batch_len >= feat_b {
+            self.cur = (self.cur * 3 / 4).clamp(min, max);
+        } else if batch_len * 4 <= feat_b {
+            if backlog_wait >= self.cur {
+                self.cur = (self.cur * 2).clamp(min, max);
+            } else {
+                self.cur = (self.cur * 3 / 4).clamp(min, max);
+            }
+        }
+    }
+}
+
+/// What a shard needs from its model replica. `ModelDriver` is the
+/// production impl (`DriverServeModel`); benches substitute a synthetic
+/// backend so batching policy can be measured without PJRT artifacts.
+pub trait ServeModel: Send {
+    /// Featurizer batch width — the coalescing target.
+    fn feat_b(&self) -> usize;
+    /// Embed a batch of density maps (one backend call per batch).
+    fn featurize(&mut self, dmaps: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+    /// Score every config of one matrix given its embedding.
+    fn score(&mut self, embed: &[f32], cols: usize) -> Result<Vec<f64>>;
+}
+
+/// Upper bound on memoized per-`cols` config featurizations per shard.
+/// SPADE's mapped vectors depend on the matrix column count, so an
+/// adversarial client could otherwise grow the cache without bound.
+const FEATS_CACHE_CAP: usize = 64;
+
+/// Production `ServeModel`: a `ModelDriver` replica plus the serve-time
+/// caches — the shared z encoding and per-`cols` config features
+/// (previously rebuilt per job in the scoring loop).
+pub struct DriverServeModel {
+    driver: ModelDriver,
+    platform: PlatformId,
+    z_all: Arc<Vec<f32>>,
+    feats_by_cols: HashMap<usize, ConfigFeatures>,
+}
+
+impl DriverServeModel {
+    pub fn new(driver: ModelDriver, platform: PlatformId, z_all: Arc<Vec<f32>>) -> Self {
+        DriverServeModel { driver, platform, z_all, feats_by_cols: HashMap::new() }
+    }
+}
+
+impl ServeModel for DriverServeModel {
+    fn feat_b(&self) -> usize {
+        self.driver.feat_b()
+    }
+
+    fn featurize(&mut self, dmaps: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.driver.featurize(dmaps)
+    }
+
+    fn score(&mut self, embed: &[f32], cols: usize) -> Result<Vec<f64>> {
+        if self.feats_by_cols.len() >= FEATS_CACHE_CAP && !self.feats_by_cols.contains_key(&cols)
+        {
+            self.feats_by_cols.clear();
+        }
+        let platform = self.platform;
+        let feats =
+            self.feats_by_cols.entry(cols).or_insert_with(|| config_features(platform, cols));
+        let (cfg, _) = feats.cfg_for_variant(&self.driver.variant);
+        self.driver.score_configs(embed, cfg, &self.z_all)
+    }
+}
+
+/// Run the service until the job budget is spent (`opts.max_jobs`,
+/// `None` = forever). All shards and the accept loop key off the same
+/// global job count: the shard that exhausts the budget raises the
+/// shutdown flag and wakes the acceptor, so a single connection sending
+/// many requests consumes the budget exactly like many connections
+/// sending one each. A batch in flight is always completed, so slightly
+/// more than `max_jobs` jobs may be answered when the last batches
 /// coalesced past the budget.
 ///
 /// Returns the bound address via the callback before serving.
 pub fn serve(
     driver: ModelDriver,
     zenc: ZEncoder,
-    platform: crate::config::PlatformId,
+    platform: PlatformId,
     addr: &str,
-    max_jobs: Option<usize>,
+    opts: ServeOpts,
     on_ready: impl FnOnce(std::net::SocketAddr) + Send + 'static,
 ) -> Result<()> {
+    let rt = driver.runtime().clone();
+    let (het_dim, latent_dim) = (rt.dim("HET_DIM"), rt.dim("LATENT_DIM"));
+    // het → z is matrix-independent: encode once, share across shards.
+    let feats0 = config_features(platform, 4096);
+    let z_all = Arc::new(zenc.encode(&feats0.het, het_dim, latent_dim).context("z encoding")?);
+    let models: Vec<Box<dyn ServeModel>> = driver
+        .replicate(opts.shards.max(1))
+        .into_iter()
+        .map(|d| Box::new(DriverServeModel::new(d, platform, z_all.clone())) as Box<dyn ServeModel>)
+        .collect();
+    serve_models(models, addr, opts, on_ready)
+}
+
+/// Backend-generic service entry: one shard per model. `serve` wraps
+/// driver replicas; `bench_serve` feeds synthetic models through here.
+pub fn serve_models(
+    models: Vec<Box<dyn ServeModel>>,
+    addr: &str,
+    opts: ServeOpts,
+    on_ready: impl FnOnce(std::net::SocketAddr) + Send + 'static,
+) -> Result<()> {
+    anyhow::ensure!(!models.is_empty(), "serve_models needs at least one shard");
     let listener = TcpListener::bind(addr).context("bind")?;
     let local = listener.local_addr()?;
-    let (tx, rx) = mpsc::channel::<Job>();
     let done = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicUsize::new(0));
 
-    // Batcher thread: the only owner of the model driver, and the only
-    // counter of served jobs. When it exits (budget reached or channel
-    // closed) it flags shutdown and pokes the listener awake.
-    let batcher = {
-        let done = done.clone();
-        std::thread::spawn(move || {
-            batcher_loop(driver, zenc, platform, rx, max_jobs);
-            done.store(true, Ordering::Release);
-            let _ = TcpStream::connect(local);
-        })
-    };
+    let mut shard_threads = Vec::new();
+    let mut shards = Vec::new();
+    for (idx, model) in models.into_iter().enumerate() {
+        let (tx, rx) = mpsc::sync_channel::<Job>(opts.queue_cap.max(1));
+        let depth = Arc::new(AtomicUsize::new(0));
+        let ctl = ShardCtl {
+            idx,
+            linger: AdaptiveLinger::new(opts.linger),
+            depth: depth.clone(),
+            done: done.clone(),
+            served: served.clone(),
+            max_jobs: opts.max_jobs,
+            local,
+        };
+        shard_threads.push(std::thread::spawn(move || shard_loop(model, rx, ctl)));
+        shards.push(ShardHandle { tx, depth });
+    }
+    let router = Arc::new(Router { shards, done: done.clone() });
     on_ready(local);
 
     // Acceptor: one handler thread per connection (connections are few;
-    // the expensive resource — the model — is behind the queue anyway).
+    // the expensive resource — the model — is behind the queues anyway).
     for stream in listener.incoming() {
         if done.load(Ordering::Acquire) {
             break;
         }
         let Ok(stream) = stream else { continue };
         crate::counter!("serve.connections_total").inc();
-        let tx = tx.clone();
+        let router = router.clone();
         std::thread::spawn(move || {
-            let _ = handle_conn(stream, tx);
+            let _ = handle_conn(stream, &router);
         });
     }
-    drop(tx);
-    let _ = batcher.join();
+    drop(router);
+    for t in shard_threads {
+        let _ = t.join();
+    }
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>) -> Result<()> {
+struct ShardHandle {
+    tx: mpsc::SyncSender<Job>,
+    /// Queued + in-flight jobs: incremented by the router on enqueue,
+    /// decremented by the shard after the reply is sent.
+    depth: Arc<AtomicUsize>,
+}
+
+/// Least-loaded job router shared by every connection handler.
+pub struct Router {
+    shards: Vec<ShardHandle>,
+    done: Arc<AtomicBool>,
+}
+
+impl Router {
+    /// Enqueue on the shallowest shard queue; on `Err` the service is
+    /// shutting down and the job was not enqueued.
+    fn route(&self, job: Job) -> std::result::Result<(), Box<Job>> {
+        if self.done.load(Ordering::Acquire) {
+            return Err(Box::new(job));
+        }
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        order.sort_by_key(|&i| self.shards[i].depth.load(Ordering::Relaxed));
+        crate::histogram!("serve.router_depth")
+            .observe(self.shards[order[0]].depth.load(Ordering::Relaxed) as u64);
+        let mut job = job;
+        for &i in &order {
+            let s = &self.shards[i];
+            s.depth.fetch_add(1, Ordering::Relaxed);
+            match s.tx.try_send(job) {
+                Ok(()) => return Ok(()),
+                Err(mpsc::TrySendError::Full(j)) => {
+                    s.depth.fetch_sub(1, Ordering::Relaxed);
+                    crate::counter!("serve.router_overflow_total").inc();
+                    job = j;
+                }
+                Err(mpsc::TrySendError::Disconnected(j)) => {
+                    s.depth.fetch_sub(1, Ordering::Relaxed);
+                    job = j;
+                }
+            }
+        }
+        // Every bounded queue is full (or its shard is gone): apply
+        // backpressure by blocking on the least-loaded shard instead of
+        // shedding the job.
+        let s = &self.shards[order[0]];
+        s.depth.fetch_add(1, Ordering::Relaxed);
+        match s.tx.send(job) {
+            Ok(()) => Ok(()),
+            Err(mpsc::SendError(j)) => {
+                s.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(Box::new(j))
+            }
+        }
+    }
+}
+
+struct ShardCtl {
+    idx: usize,
+    linger: AdaptiveLinger,
+    depth: Arc<AtomicUsize>,
+    done: Arc<AtomicBool>,
+    /// Global served-jobs count — the shared `max_jobs` budget.
+    served: Arc<AtomicUsize>,
+    max_jobs: Option<usize>,
+    local: std::net::SocketAddr,
+}
+
+fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: ShardCtl) {
+    let feat_b = model.feat_b().max(1);
+    // Instanced per-shard metrics: registered via `registry()` directly
+    // because the macros cache one name per call site (every shard
+    // would otherwise alias the first shard's cell).
+    let reg = crate::util::metrics::registry();
+    let jobs_ctr = reg.counter(&format!("serve.shard_jobs_total.{}", ctl.idx));
+    let linger_gauge = reg.gauge(&format!("serve.shard_linger_us.{}", ctl.idx));
+    linger_gauge.set(ctl.linger.window().as_micros() as f64);
+
+    loop {
+        if ctl.done.load(Ordering::Acquire) {
+            break;
+        }
+        // Bounded wait so an idle shard notices another shard spending
+        // the budget (the blocking `recv` of the seed would sleep
+        // through shutdown).
+        let first = match rx.recv_timeout(SHARD_POLL) {
+            Ok(j) => j,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        // Controller load signal: how long the head job sat queued
+        // BEFORE lingering (queue_wait_us includes the linger window
+        // and would make every lone job look like backlog).
+        let backlog_wait = first.arrived.elapsed();
+        // Dynamic batching: collect more jobs within the linger window,
+        // up to the featurizer batch width.
+        let mut batch = vec![first];
+        let deadline = Instant::now() + ctl.linger.window();
+        while batch.len() < feat_b {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => batch.push(job),
+                Err(_) => break,
+            }
+        }
+        let filled_early = batch.len() >= feat_b && Instant::now() < deadline;
+        let n_batched = batch.len();
+        let dequeued = Instant::now();
+        crate::histogram!("serve.batch_size").observe(n_batched as u64);
+        // One queue-wait observation and one jobs_total bump per job —
+        // adjacent so the stats invariant has no wide race window.
+        for job in &batch {
+            crate::histogram!("serve.queue_wait_us")
+                .observe_duration(dequeued.duration_since(job.arrived));
+            crate::counter!("serve.jobs_total").inc();
+        }
+        jobs_ctr.add(n_batched as u64);
+
+        let dmaps: Vec<Vec<f32>> = batch.iter().map(|j| density_map(&j.matrix)).collect();
+        let dmap_refs: Vec<&[f32]> = dmaps.iter().map(|d| d.as_slice()).collect();
+        let t_feat = Instant::now();
+        let featurized = model.featurize(&dmap_refs);
+        let feat_elapsed = t_feat.elapsed();
+        crate::histogram!("serve.featurize_us").observe_duration(feat_elapsed);
+        match featurized {
+            Ok(embeds) => {
+                // featurize_ms is shared across the batch (one call).
+                let featurize_ms = feat_elapsed.as_secs_f64() * 1e3;
+                for (job, embed) in batch.into_iter().zip(embeds) {
+                    let queue_wait_ms =
+                        dequeued.duration_since(job.arrived).as_secs_f64() * 1e3;
+                    let t_score = Instant::now();
+                    let scored = model.score(&embed, job.matrix.cols);
+                    let score_elapsed = t_score.elapsed();
+                    crate::histogram!("serve.score_us").observe_duration(score_elapsed);
+                    let resp = match scored {
+                        Ok(scores) => {
+                            let top = top_k(&scores, job.k);
+                            Json::obj(vec![
+                                ("id", Json::Num(job.id as f64)),
+                                ("top", Json::arr_usize(&top)),
+                                (
+                                    "scores",
+                                    Json::arr_f64(
+                                        &top.iter().map(|&i| scores[i]).collect::<Vec<_>>(),
+                                    ),
+                                ),
+                                (
+                                    "latency_ms",
+                                    Json::Num(job.arrived.elapsed().as_secs_f64() * 1e3),
+                                ),
+                                ("batched_with", Json::Num(n_batched as f64)),
+                                ("shard", Json::Num(ctl.idx as f64)),
+                                (
+                                    "stages",
+                                    Json::obj(vec![
+                                        ("queue_wait_ms", Json::Num(queue_wait_ms)),
+                                        ("featurize_ms", Json::Num(featurize_ms)),
+                                        (
+                                            "score_ms",
+                                            Json::Num(score_elapsed.as_secs_f64() * 1e3),
+                                        ),
+                                    ]),
+                                ),
+                            ])
+                        }
+                        Err(e) => {
+                            crate::counter!("serve.errors_total").inc();
+                            Json::obj(vec![("error", Json::Str(format!("score: {e}")))])
+                        }
+                    };
+                    let _ = job.reply.send(resp);
+                    ctl.depth.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+            Err(e) => {
+                for job in &batch {
+                    crate::counter!("serve.errors_total").inc();
+                    let _ = job.reply.send(Json::obj(vec![(
+                        "error",
+                        Json::Str(format!("featurize: {e}")),
+                    )]));
+                    ctl.depth.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
+
+        ctl.linger.on_batch(n_batched, feat_b, filled_early, backlog_wait);
+        let window_us = ctl.linger.window().as_micros() as f64;
+        linger_gauge.set(window_us);
+        // Global view: last shard to finish a batch wins (documented).
+        crate::gauge!("serve.linger_us").set(window_us);
+
+        // Errored jobs still consume budget (parity with the seed).
+        let total = ctl.served.fetch_add(n_batched, Ordering::Relaxed) + n_batched;
+        if matches!(ctl.max_jobs, Some(mj) if total >= mj) {
+            ctl.done.store(true, Ordering::Release);
+            // Wake the acceptor so it observes the flag and exits.
+            let _ = TcpStream::connect(ctl.local);
+            break;
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -125,7 +549,7 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>) -> Result<()> {
             }
         };
         // Control request: live metrics snapshot, answered here so it
-        // works even while the scoring queue is saturated (and after
+        // works even while the scoring queues are saturated (and after
         // the job budget is spent, as long as the acceptor is up).
         if req.get("stats").and_then(|v| v.as_bool()) == Some(true) {
             crate::counter!("serve.stats_requests_total").inc();
@@ -140,20 +564,25 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>) -> Result<()> {
             Ok((id, k, matrix)) => {
                 let (rtx, rrx) = mpsc::channel();
                 let job = Job { id, k, matrix, reply: rtx, arrived: Instant::now() };
-                if tx.send(job).is_err() {
-                    // Batcher already shut down (job budget exhausted):
-                    // still reply with well-formed JSON.
-                    crate::counter!("serve.errors_total").inc();
-                    let err =
-                        Json::obj(vec![("error", Json::Str("service shutting down".into()))]);
-                    writeln!(writer, "{}", err.to_string())?;
-                    continue;
+                match router.route(job) {
+                    Ok(()) => {
+                        let resp = rrx.recv().unwrap_or_else(|_| {
+                            crate::counter!("serve.errors_total").inc();
+                            Json::obj(vec![("error", Json::Str("batcher died".into()))])
+                        });
+                        writeln!(writer, "{}", resp.to_string())?;
+                    }
+                    Err(_) => {
+                        // Shards already shut down (job budget spent):
+                        // still reply with well-formed JSON.
+                        crate::counter!("serve.errors_total").inc();
+                        let err = Json::obj(vec![(
+                            "error",
+                            Json::Str("service shutting down".into()),
+                        )]);
+                        writeln!(writer, "{}", err.to_string())?;
+                    }
                 }
-                let resp = rrx.recv().unwrap_or_else(|_| {
-                    crate::counter!("serve.errors_total").inc();
-                    Json::obj(vec![("error", Json::Str("batcher died".into()))])
-                });
-                writeln!(writer, "{}", resp.to_string())?;
             }
             Err(e) => {
                 crate::counter!("serve.errors_total").inc();
@@ -197,151 +626,36 @@ fn parse_request(req: &Json) -> Result<(i64, usize, Csr)> {
     Ok((id, k, Csr::from_coo(rows, cols, coo)))
 }
 
-fn batcher_loop(
-    driver: ModelDriver,
-    zenc: ZEncoder,
-    platform: crate::config::PlatformId,
-    rx: mpsc::Receiver<Job>,
-    max_jobs: Option<usize>,
-) {
-    let rt = driver.runtime().clone();
-    let (het_dim, latent_dim) = (rt.dim("HET_DIM"), rt.dim("LATENT_DIM"));
-    let feat_b = driver.feat_b();
-    let mut served = 0usize;
-    // het → z is matrix-independent: encode once up front.
-    let feats0 = config_features(platform, 4096);
-    let z_all = match zenc.encode(&feats0.het, het_dim, latent_dim) {
-        Ok(z) => z,
-        Err(e) => {
-            crate::warn!("batcher: z encoding failed: {e}");
-            return;
-        }
-    };
-
-    while let Ok(first) = rx.recv() {
-        // Dynamic batching: collect more jobs within the linger window,
-        // up to the featurizer batch width.
-        let mut batch = vec![first];
-        let deadline = Instant::now() + LINGER;
-        while batch.len() < feat_b {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+/// Serialise a scoring request for `m` as one JSON line (no trailing
+/// newline). Written straight into one pre-sized `String` — the seed
+/// built a `Json::Arr` with three boxed nodes per nonzero, which
+/// dominated client-side request cost for large matrices.
+pub fn request_payload(id: i64, k: usize, m: &Csr) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(64 + 16 * m.nnz());
+    let _ = write!(
+        s,
+        "{{\"id\":{id},\"k\":{k},\"rows\":{},\"cols\":{},\"coo\":[",
+        m.rows, m.cols
+    );
+    let mut first = true;
+    for r in 0..m.rows {
+        for (&c, &v) in m.row_indices(r).iter().zip(m.row_values(r)) {
+            if !first {
+                s.push(',');
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(job) => batch.push(job),
-                Err(_) => break,
-            }
-        }
-        let n_batched = batch.len();
-        let dequeued = Instant::now();
-        crate::histogram!("serve.batch_size").observe(n_batched as u64);
-        // One queue-wait observation and one jobs_total bump per job —
-        // adjacent so the stats invariant has no wide race window.
-        for job in &batch {
-            crate::histogram!("serve.queue_wait_us")
-                .observe_duration(dequeued.duration_since(job.arrived));
-            crate::counter!("serve.jobs_total").inc();
-        }
-        let dmaps: Vec<Vec<f32>> = batch.iter().map(|j| density_map(&j.matrix)).collect();
-        let dmap_refs: Vec<&[f32]> = dmaps.iter().map(|d| d.as_slice()).collect();
-        let t_feat = Instant::now();
-        let featurized = driver.featurize(&dmap_refs);
-        let feat_elapsed = t_feat.elapsed();
-        crate::histogram!("serve.featurize_us").observe_duration(feat_elapsed);
-        let embeds = match featurized {
-            Ok(e) => e,
-            Err(e) => {
-                for job in &batch {
-                    crate::counter!("serve.errors_total").inc();
-                    let _ = job.reply.send(Json::obj(vec![(
-                        "error",
-                        Json::Str(format!("featurize: {e}")),
-                    )]));
-                }
-                served += batch.len();
-                if matches!(max_jobs, Some(m) if served >= m) {
-                    break;
-                }
-                continue;
-            }
-        };
-        // featurize_ms is shared across the batch (one PJRT call).
-        let featurize_ms = feat_elapsed.as_secs_f64() * 1e3;
-        for (job, embed) in batch.into_iter().zip(embeds) {
-            let queue_wait_ms =
-                dequeued.duration_since(job.arrived).as_secs_f64() * 1e3;
-            let feats = config_features(platform, job.matrix.cols);
-            let (cfg, _) = feats.cfg_for_variant(&driver.variant);
-            let t_score = Instant::now();
-            let scored = driver.score_configs(&embed, cfg, &z_all);
-            let score_elapsed = t_score.elapsed();
-            crate::histogram!("serve.score_us").observe_duration(score_elapsed);
-            let resp = match scored {
-                Ok(scores) => {
-                    let top = top_k(&scores, job.k);
-                    Json::obj(vec![
-                        ("id", Json::Num(job.id as f64)),
-                        ("top", Json::arr_usize(&top)),
-                        (
-                            "scores",
-                            Json::arr_f64(&top.iter().map(|&i| scores[i]).collect::<Vec<_>>()),
-                        ),
-                        (
-                            "latency_ms",
-                            Json::Num(job.arrived.elapsed().as_secs_f64() * 1e3),
-                        ),
-                        ("batched_with", Json::Num(n_batched as f64)),
-                        (
-                            "stages",
-                            Json::obj(vec![
-                                ("queue_wait_ms", Json::Num(queue_wait_ms)),
-                                ("featurize_ms", Json::Num(featurize_ms)),
-                                (
-                                    "score_ms",
-                                    Json::Num(score_elapsed.as_secs_f64() * 1e3),
-                                ),
-                            ]),
-                        ),
-                    ])
-                }
-                Err(e) => {
-                    crate::counter!("serve.errors_total").inc();
-                    Json::obj(vec![("error", Json::Str(format!("score: {e}")))])
-                }
-            };
-            let _ = job.reply.send(resp);
-            served += 1;
-        }
-        if let Some(m) = max_jobs {
-            if served >= m {
-                break;
-            }
+            first = false;
+            let _ = write!(s, "[{r},{c},{v}]");
         }
     }
+    s.push_str("]}");
+    s
 }
 
 /// Blocking client helper (used by tests and the quickstart example).
 pub fn request(addr: std::net::SocketAddr, id: i64, k: usize, m: &Csr) -> Result<Json> {
     let mut stream = TcpStream::connect(addr)?;
-    let mut coo = Vec::new();
-    for r in 0..m.rows {
-        for (&c, &v) in m.row_indices(r).iter().zip(m.row_values(r)) {
-            coo.push(Json::Arr(vec![
-                Json::Num(r as f64),
-                Json::Num(c as f64),
-                Json::Num(v as f64),
-            ]));
-        }
-    }
-    let req = Json::obj(vec![
-        ("id", Json::Num(id as f64)),
-        ("k", Json::Num(k as f64)),
-        ("rows", Json::Num(m.rows as f64)),
-        ("cols", Json::Num(m.cols as f64)),
-        ("coo", Json::Arr(coo)),
-    ]);
-    writeln!(stream, "{}", req.to_string())?;
+    writeln!(stream, "{}", request_payload(id, k, m))?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -369,5 +683,103 @@ pub fn record_for(m: &Csr, costs: Vec<f64>, name: &str) -> MatrixRecord {
         rows: m.rows,
         nnz: m.nnz(),
         costs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn fixed_linger_never_moves() {
+        let mut l = AdaptiveLinger::new(LingerPolicy::Fixed(8 * MS));
+        assert_eq!(l.window(), 8 * MS);
+        l.on_batch(16, 16, true, Duration::ZERO);
+        l.on_batch(1, 16, false, 100 * MS);
+        assert_eq!(l.window(), 8 * MS);
+    }
+
+    #[test]
+    fn adaptive_starts_at_min_and_grows_under_load() {
+        let mut l = AdaptiveLinger::new(LingerPolicy::adaptive_to(8 * MS));
+        assert_eq!(l.window(), LINGER_MIN);
+        // Near-empty batches with the head job already waiting a full
+        // window → double toward the cap.
+        for _ in 0..20 {
+            l.on_batch(1, 16, false, 100 * MS);
+        }
+        assert_eq!(l.window(), 8 * MS, "growth must clamp at the cap");
+    }
+
+    #[test]
+    fn adaptive_shrinks_when_batches_fill_early() {
+        let mut l = AdaptiveLinger::new(LingerPolicy::Adaptive { min: LINGER_MIN, max: 8 * MS });
+        for _ in 0..5 {
+            l.on_batch(1, 16, false, 100 * MS); // grow to the cap first
+        }
+        let grown = l.window();
+        l.on_batch(16, 16, true, 100 * MS);
+        assert!(l.window() < grown, "full-early batch must shrink the window");
+    }
+
+    #[test]
+    fn adaptive_shrinks_when_near_empty_and_idle() {
+        let mut l = AdaptiveLinger::new(LingerPolicy::Adaptive { min: LINGER_MIN, max: 8 * MS });
+        for _ in 0..5 {
+            l.on_batch(1, 16, false, 100 * MS);
+        }
+        let grown = l.window();
+        // Lone job that had NOT been waiting (arrived into an idle
+        // shard): don't hold it hostage next time.
+        l.on_batch(1, 16, false, Duration::ZERO);
+        assert!(l.window() < grown);
+        // And repeated idle traffic bottoms out at the floor.
+        for _ in 0..40 {
+            l.on_batch(1, 16, false, Duration::ZERO);
+        }
+        assert_eq!(l.window(), LINGER_MIN);
+    }
+
+    #[test]
+    fn adaptive_mid_batches_hold_steady() {
+        let mut l = AdaptiveLinger::new(LingerPolicy::Adaptive { min: LINGER_MIN, max: 8 * MS });
+        for _ in 0..3 {
+            l.on_batch(1, 16, false, 100 * MS);
+        }
+        let w = l.window();
+        // Half-full batch that hit the deadline: neither rule fires.
+        l.on_batch(8, 16, false, 100 * MS);
+        assert_eq!(l.window(), w);
+    }
+
+    #[test]
+    fn adaptive_to_clips_min_to_cap() {
+        let p = LingerPolicy::adaptive_to(Duration::from_micros(100));
+        let LingerPolicy::Adaptive { min, max } = p else { panic!("adaptive") };
+        assert!(min <= max);
+        assert_eq!(max, Duration::from_micros(100));
+    }
+
+    #[test]
+    fn request_payload_round_trips_through_parse_request() {
+        let m = Csr::from_coo(
+            3,
+            4,
+            vec![(0, 1, 2.0), (0, 3, 0.5), (1, 0, 1.0), (2, 2, 4.25)],
+        );
+        let payload = request_payload(7, 3, &m);
+        let req = Json::parse(&payload).expect("payload must be valid JSON");
+        let (id, k, parsed) = parse_request(&req).expect("payload must parse as a request");
+        assert_eq!(id, 7);
+        assert_eq!(k, 3);
+        assert_eq!(parsed.rows, m.rows);
+        assert_eq!(parsed.cols, m.cols);
+        assert_eq!(parsed.nnz(), m.nnz());
+        for r in 0..m.rows {
+            assert_eq!(parsed.row_indices(r), m.row_indices(r));
+            assert_eq!(parsed.row_values(r), m.row_values(r));
+        }
     }
 }

@@ -69,6 +69,31 @@ impl ModelDriver {
         }
     }
 
+    /// Split one trained driver into `n ≥ 1` serving replicas. The
+    /// runtime `Arc` is shared (PJRT executions already serialise on
+    /// the runtime's internal lock); θ is cloned per replica so each
+    /// shard batcher owns its parameters without synchronisation.
+    /// Optimiser state is dropped — replicas only run the featurize /
+    /// score entry points, and `train_step` on a replica fails its
+    /// shape check cleanly rather than training on empty m/v.
+    pub fn replicate(self, n: usize) -> Vec<ModelDriver> {
+        let n = n.max(1);
+        let mut out = Vec::with_capacity(n);
+        for _ in 1..n {
+            out.push(ModelDriver {
+                rt: self.rt.clone(),
+                variant: self.variant.clone(),
+                theta: self.theta.clone(),
+                m: Vec::new(),
+                v: Vec::new(),
+                step: self.step,
+                cfg_dim: self.cfg_dim,
+            });
+        }
+        out.push(ModelDriver { m: Vec::new(), v: Vec::new(), ..self });
+        out
+    }
+
     pub fn runtime(&self) -> &Arc<Runtime> {
         &self.rt
     }

@@ -163,6 +163,26 @@ mod tests {
         let zero = ZEncoder::Zero.encode(&het, 16, 64).unwrap();
         assert!(zero.iter().all(|&x| x == 0.0));
     }
+
+    #[test]
+    fn epoch_metrics_jsonl_appends_parseable_lines() {
+        let path = std::env::temp_dir()
+            .join(format!("cognate-epoch-metrics-{}", std::process::id()))
+            .join("metrics_epochs.jsonl");
+        let _ = std::fs::remove_file(&path);
+        super::append_epoch_metrics(&path, "cognate", 0);
+        super::append_epoch_metrics(&path, "cognate", 1);
+        let text = std::fs::read_to_string(&path).expect("jsonl written");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one line per epoch");
+        for (i, line) in lines.iter().enumerate() {
+            let j = crate::util::json::Json::parse(line).expect("line parses");
+            assert_eq!(j.req("epoch").as_usize(), Some(i));
+            assert_eq!(j.req("variant").as_str(), Some("cognate"));
+            assert!(j.req("metrics").get("counters").is_some(), "snapshot shape");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -177,6 +197,11 @@ pub struct TrainOpts {
     /// Configs scored per validation matrix.
     pub val_configs: usize,
     pub log_every: usize,
+    /// Append a per-epoch `Registry::snapshot()` JSON line here (one
+    /// `{"epoch": N, "variant": ..., "metrics": {...}}` object per
+    /// line), so experiment reruns can be diffed without rerunning.
+    /// `None` = don't persist.
+    pub metrics_jsonl: Option<std::path::PathBuf>,
 }
 
 impl Default for TrainOpts {
@@ -189,7 +214,31 @@ impl Default for TrainOpts {
             val_matrices: 8,
             val_configs: 48,
             log_every: 4,
+            metrics_jsonl: None,
         }
+    }
+}
+
+/// Append one epoch's telemetry snapshot to a JSONL file. Best-effort:
+/// a persistence failure warns and never fails the training run.
+fn append_epoch_metrics(path: &std::path::Path, variant: &str, epoch: usize) {
+    use std::io::Write as _;
+    let line = crate::util::json::Json::obj(vec![
+        ("epoch", crate::util::json::Json::Num(epoch as f64)),
+        ("variant", crate::util::json::Json::Str(variant.to_string())),
+        ("metrics", crate::util::metrics::registry().snapshot()),
+    ]);
+    let res = (|| -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        writeln!(f, "{}", line.to_string())
+    })();
+    if let Err(e) = res {
+        crate::warn!("failed to append epoch metrics to {}: {e}", path.display());
     }
 }
 
@@ -327,6 +376,9 @@ pub fn train(
                 "[{}] epoch {epoch}: loss={train_loss:.4} prl={prl:.3} opa={opa:.3} ktau={ktau:.3}",
                 driver.variant
             );
+        }
+        if let Some(path) = &opts.metrics_jsonl {
+            append_epoch_metrics(path, &driver.variant, epoch);
         }
         logs.push(EpochLog { epoch, train_loss, val_prl: prl, val_opa: opa, val_ktau: ktau });
     }

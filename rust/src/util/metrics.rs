@@ -26,6 +26,14 @@
 //! Span timing: `time_span!("stage.us", { work })` observes the block's
 //! wall time into the named histogram and returns the block's value;
 //! `Span::new` is the RAII form for early-return-heavy code.
+//!
+//! Instanced metrics (one per shard / worker, e.g.
+//! `serve.shard_jobs_total.<i>`): the macros cache ONE name per call
+//! site, so a dynamic name through `counter!` would silently alias
+//! every instance onto whichever name registered first. Register those
+//! through `registry().counter(&format!(...))` once at thread start
+//! and hold the returned `&'static` handle — same lock-free hot path,
+//! one registration per instance instead of per call site.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;

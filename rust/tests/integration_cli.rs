@@ -1,0 +1,75 @@
+//! CLI round-trip: pretrain → finetune → eval through `cli::main_inner`
+//! — the checkpoint/eval path a user actually drives, at `--scale
+//! micro` so the whole chain runs in seconds. Requires `make artifacts`.
+
+use cognate::cli;
+
+fn run(argv: &[&str]) {
+    let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+    cli::main_inner(&argv).unwrap_or_else(|e| panic!("{} failed: {e:#}", argv.join(" ")));
+}
+
+#[test]
+fn checkpoint_cli_roundtrip_pretrain_finetune_eval() {
+    let tmp = std::env::temp_dir().join(format!("cognate-cli-rt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    let dir = tmp.to_str().unwrap();
+    let pre = tmp.join("pretrained.ckpt");
+    let ft = tmp.join("finetuned.ckpt");
+
+    run(&[
+        "pretrain",
+        "--scale",
+        "micro",
+        "--results-dir",
+        dir,
+        "--out",
+        pre.to_str().unwrap(),
+    ]);
+    assert!(pre.exists(), "pretrain must write its checkpoint");
+
+    run(&[
+        "finetune",
+        "--ckpt",
+        pre.to_str().unwrap(),
+        "--target",
+        "spade",
+        "--scale",
+        "micro",
+        "--results-dir",
+        dir,
+        "--out",
+        ft.to_str().unwrap(),
+    ]);
+    assert!(ft.exists(), "finetune must write its checkpoint");
+
+    run(&[
+        "eval",
+        "--ckpt",
+        ft.to_str().unwrap(),
+        "--target",
+        "spade",
+        "--k",
+        "5",
+        "--scale",
+        "micro",
+        "--results-dir",
+        dir,
+    ]);
+
+    // Training telemetry was persisted per epoch under the results dir:
+    // 3 pretrain epochs + 2 finetune epochs at micro scale.
+    let jsonl = tmp.join("metrics_epochs.jsonl");
+    assert!(jsonl.exists(), "train must append metrics_epochs.jsonl");
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5, "one snapshot line per epoch");
+    for line in &lines {
+        let j = cognate::util::json::Json::parse(line).expect("snapshot line parses");
+        assert!(j.req("epoch").as_usize().is_some());
+        assert!(j.req("metrics").get("counters").is_some(), "snapshot JSON shape");
+    }
+
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -8,30 +8,12 @@ use cognate::coordinator::{serve, Pipeline, Scale};
 use cognate::kernels::Op;
 use cognate::model::ModelDriver;
 use cognate::search::{evaluate, oracle_summary};
-use cognate::train::{train, TrainOpts, ZEncoder};
+use cognate::train::{train, ZEncoder};
 
 fn micro_scale() -> Scale {
-    let mut s = Scale::small();
-    s.per_cell = 1; // 30 matrices
-    s.max_dim = 640;
-    s.pretrain_matrices = 10;
-    s.finetune_matrices = 3;
-    s.eval_matrices = 8;
-    s.pretrain_opts = TrainOpts {
-        epochs: 3,
-        batches_per_epoch: 10,
-        val_matrices: 0,
-        ..TrainOpts::default()
-    };
-    s.finetune_opts = TrainOpts {
-        epochs: 2,
-        batches_per_epoch: 6,
-        val_matrices: 0,
-        ..TrainOpts::default()
-    };
-    s.ae_steps = 60;
-    s.seed = 0xBEEF;
-    s
+    // The smallest runnable shape lives in the library now so the CLI
+    // (`--scale micro`) and these tests stay in lockstep.
+    Scale::micro()
 }
 
 #[test]
@@ -95,7 +77,7 @@ fn tuning_service_round_trip() {
             zenc,
             PlatformId::Spade,
             "127.0.0.1:0",
-            Some(3),
+            serve::ServeOpts::with_max_jobs(Some(3)),
             move |a| {
                 let _ = addr_tx.send(a);
             },

@@ -19,28 +19,37 @@ use std::time::Duration;
 
 static SERIAL: Mutex<()> = Mutex::new(());
 
-fn micro_scale() -> Scale {
-    let mut s = Scale::small();
-    s.per_cell = 1;
-    s.max_dim = 640;
-    s.seed = 0xBEEF;
-    s
-}
-
 /// Start a service with an untrained (but fully initialised) model —
 /// scoring quality is irrelevant here, only the protocol and telemetry.
-fn start_server(max_jobs: Option<usize>) -> (SocketAddr, std::thread::JoinHandle<()>) {
-    let pipe = Pipeline::new(micro_scale()).expect("artifacts present");
+fn start_server(
+    shards: usize,
+    max_jobs: Option<usize>,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let pipe = Pipeline::new(Scale::micro()).expect("artifacts present");
     let driver = ModelDriver::init(pipe.rt.clone(), "cognate", 1).unwrap();
+    let opts = serve::ServeOpts { shards, max_jobs, ..serve::ServeOpts::default() };
     let (addr_tx, addr_rx) = mpsc::channel();
     let handle = std::thread::spawn(move || {
-        serve::serve(driver, ZEncoder::Zero, PlatformId::Spade, "127.0.0.1:0", max_jobs, move |a| {
+        serve::serve(driver, ZEncoder::Zero, PlatformId::Spade, "127.0.0.1:0", opts, move |a| {
             let _ = addr_tx.send(a);
         })
         .unwrap();
     });
     let addr = addr_rx.recv_timeout(Duration::from_secs(120)).unwrap();
     (addr, handle)
+}
+
+/// Counter value from a snapshot, 0 when not yet registered.
+fn counter_of(snap: &cognate::util::json::Json, name: &str) -> usize {
+    snap.req("counters").get(name).and_then(|v| v.as_usize()).unwrap_or(0)
+}
+
+/// `count` of a histogram from a snapshot, 0 when not yet registered.
+fn hist_count_of(snap: &cognate::util::json::Json, name: &str) -> usize {
+    snap.req("histograms")
+        .get(name)
+        .and_then(|h| h.req("count").as_usize())
+        .unwrap_or(0)
 }
 
 fn test_matrix(seed: u64) -> cognate::sparse::Csr {
@@ -60,7 +69,7 @@ fn raw_roundtrip(addr: SocketAddr, line: &str) -> cognate::util::json::Json {
 #[test]
 fn stats_snapshot_counters_consistent_after_serving() {
     let _g = SERIAL.lock().unwrap();
-    let (addr, _server) = start_server(None);
+    let (addr, _server) = start_server(1, None);
 
     // Two scoring requests (sequential connections — the counts matter
     // here, not the batching).
@@ -108,7 +117,7 @@ fn max_jobs_counts_jobs_not_connections() {
     // the budget, so one connection issuing 3 requests left serve()
     // blocked forever waiting for 2 more connections. Now the batcher's
     // job count drives shutdown and serve() must return.
-    let (addr, server) = start_server(Some(3));
+    let (addr, server) = start_server(1, Some(3));
     let mut stream = TcpStream::connect(addr).unwrap();
     let m = test_matrix(7);
     let mut reader = BufReader::new(stream.try_clone().unwrap());
@@ -148,7 +157,7 @@ fn max_jobs_counts_jobs_not_connections() {
 #[test]
 fn malformed_requests_get_json_error_replies() {
     let _g = SERIAL.lock().unwrap();
-    let (addr, _server) = start_server(None);
+    let (addr, _server) = start_server(1, None);
 
     // Not JSON at all.
     let r = raw_roundtrip(addr, "this is not json");
@@ -170,7 +179,7 @@ fn malformed_requests_get_json_error_replies() {
 #[test]
 fn request_after_job_budget_exhausted_gets_error_reply() {
     let _g = SERIAL.lock().unwrap();
-    let (addr, server) = start_server(Some(1));
+    let (addr, server) = start_server(1, Some(1));
     // Keep one connection open across the budget boundary.
     let stream = TcpStream::connect(addr).unwrap();
     let mut writer = stream.try_clone().unwrap();
@@ -202,4 +211,83 @@ fn request_after_job_budget_exhausted_gets_error_reply() {
     done_rx
         .recv_timeout(Duration::from_secs(60))
         .expect("serve() must return after the budget is spent");
+}
+
+#[test]
+fn sharded_serve_preserves_job_count_invariant() {
+    let _g = SERIAL.lock().unwrap();
+    let shards = 3;
+    let n_jobs = 12;
+    // The server runs in this process, so the before/after snapshots
+    // come straight from the shared registry (deltas, because other
+    // tests in this binary also serve jobs).
+    let before = cognate::util::metrics::registry().snapshot();
+    let (addr, _server) = start_server(shards, None);
+
+    let clients: Vec<_> = (0..n_jobs)
+        .map(|id| {
+            std::thread::spawn(move || serve::request(addr, id as i64, 3, &test_matrix(id as u64)))
+        })
+        .collect();
+    for c in clients {
+        let resp = c.join().unwrap().unwrap();
+        assert!(resp.get("error").is_none(), "server error: {}", resp.to_string());
+        let shard = resp.req("shard").as_usize().expect("reply carries its shard index");
+        assert!(shard < shards, "shard {shard} out of range");
+    }
+
+    // All replies are in hand and no other traffic exists → quiescent.
+    let after = cognate::util::metrics::registry().snapshot();
+    let d_jobs =
+        counter_of(&after, "serve.jobs_total") - counter_of(&before, "serve.jobs_total");
+    let d_qwait = hist_count_of(&after, "serve.queue_wait_us")
+        - hist_count_of(&before, "serve.queue_wait_us");
+    assert_eq!(d_jobs, n_jobs, "every job dequeued exactly once across shards");
+    assert_eq!(d_qwait, n_jobs, "queue_wait_us.count must track jobs_total across shards");
+    let d_shard_jobs: usize = (0..shards)
+        .map(|i| {
+            let name = format!("serve.shard_jobs_total.{i}");
+            counter_of(&after, &name) - counter_of(&before, &name)
+        })
+        .sum();
+    assert_eq!(d_shard_jobs, n_jobs, "per-shard counters must partition the job count");
+    // The adaptive controller published its window for at least one shard.
+    assert!(
+        after.req("gauges").get("serve.linger_us").and_then(|v| v.as_f64()).unwrap_or(0.0)
+            > 0.0,
+        "serve.linger_us gauge must be set"
+    );
+}
+
+#[test]
+fn sharded_max_jobs_shutdown_contract() {
+    let _g = SERIAL.lock().unwrap();
+    // The job budget is global across shards: 4 jobs over 2 shards must
+    // wind the whole service down, exactly like the single-shard case.
+    let (addr, server) = start_server(2, Some(4));
+    let clients: Vec<_> = (0..4)
+        .map(|id| {
+            std::thread::spawn(move || serve::request(addr, id as i64, 2, &test_matrix(id as u64)))
+        })
+        .collect();
+    for c in clients {
+        let resp = c.join().unwrap().unwrap();
+        assert!(resp.get("error").is_none(), "server error: {}", resp.to_string());
+    }
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = server.join();
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("serve() must return once the shared budget is spent");
+    // Quiescent: the global invariant holds over everything this binary
+    // has served so far, shards included.
+    let snap = cognate::util::metrics::registry().snapshot();
+    assert_eq!(
+        hist_count_of(&snap, "serve.queue_wait_us"),
+        counter_of(&snap, "serve.jobs_total"),
+        "queue_wait_us.count == jobs_total at quiescence"
+    );
 }

@@ -45,6 +45,12 @@ echo "== telemetry hot-path bench → BENCH_metrics.json =="
 BENCH_OUT="$(pwd)/BENCH_metrics.json" \
     cargo bench --bench bench_metrics --manifest-path "$manifest"
 
+echo "== serve batching A/B bench → BENCH_serve.json =="
+# bench_serve exits non-zero unless p95 queue wait improves with
+# 4 shards + adaptive linger over 1 shard + fixed 8ms linger.
+BENCH_OUT="$(pwd)/BENCH_serve.json" \
+    cargo bench --bench bench_serve --manifest-path "$manifest"
+
 echo "== telemetry smoke: serve demo + snapshot =="
 # The demo needs AOT artifacts; skip (don't fail) when they are absent,
 # matching how the artifact-gated tests behave.
