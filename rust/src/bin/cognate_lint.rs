@@ -1,0 +1,127 @@
+//! `cognate_lint` — the crate's invariant-enforcing static analysis
+//! pass (see `util/lint`). Scans `rust/src`, `rust/benches`,
+//! `rust/tests`, and `examples`, prints `file:line: rule: message`
+//! diagnostics to stderr plus a machine-readable JSON summary, and
+//! exits 1 on any finding (2 on IO/usage errors).
+//!
+//! ```text
+//! cargo run --release --bin cognate_lint [-- --root PATH] [--json PATH]
+//! ```
+
+use cognate::util::lint::{discover_root, find_repo_root, lint_repo, ALL_RULES, SCAN_DIRS};
+use std::path::{Path, PathBuf};
+
+const HELP: &str = "cognate_lint: static analysis over the cognate crate
+
+USAGE:
+    cognate_lint [--root PATH] [--json PATH] [--quiet]
+
+OPTIONS:
+    --root PATH   repo root (default: $COGNATE_LINT_ROOT, else discovered
+                  by walking up from the current directory)
+    --json PATH   write the JSON summary to PATH instead of stdout
+    --quiet       suppress per-finding diagnostics (JSON summary only)
+    -h, --help    print this help
+
+RULES:
+    metric-canon, macro-instanced-aliasing, safety-comment, panic-audit,
+    determinism — documented in ROADMAP.md §Static analysis. Suppress a
+    single finding with `// lint:allow(<rule>) reason`; configure
+    allowlists in lint.toml at the repo root.
+
+EXIT CODES:
+    0  no findings      1  findings reported      2  usage or IO error
+";
+
+struct Args {
+    root: Option<PathBuf>,
+    json_out: Option<PathBuf>,
+    quiet: bool,
+}
+
+fn parse_args() -> Result<Option<Args>, String> {
+    let mut args = Args { root: None, json_out: None, quiet: false };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "-h" | "--help" => return Ok(None),
+            "--quiet" => args.quiet = true,
+            "--root" => {
+                let v = it.next().ok_or("--root needs a PATH")?;
+                args.root = Some(PathBuf::from(v));
+            }
+            "--json" => {
+                let v = it.next().ok_or("--json needs a PATH")?;
+                args.json_out = Some(PathBuf::from(v));
+            }
+            other => return Err(format!("unknown argument {other:?} (see --help)")),
+        }
+    }
+    Ok(Some(args))
+}
+
+fn main() {
+    let args = match parse_args() {
+        Ok(Some(a)) => a,
+        Ok(None) => {
+            print!("{HELP}");
+            return;
+        }
+        Err(e) => {
+            eprintln!("cognate_lint: {e}");
+            std::process::exit(2);
+        }
+    };
+    let root = match &args.root {
+        Some(r) => find_repo_root(r).or_else(|| Some(r.clone())),
+        None => discover_root(),
+    };
+    let Some(root) = root else {
+        eprintln!(
+            "cognate_lint: could not find the repo root (need rust/src + ROADMAP.md); \
+             pass --root or set COGNATE_LINT_ROOT"
+        );
+        std::process::exit(2);
+    };
+    let report = match lint_repo(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cognate_lint: scan failed under {}: {e}", root.display());
+            std::process::exit(2);
+        }
+    };
+    if !args.quiet {
+        eprint!("{}", report.render());
+    }
+    let summary = report.to_json().to_string_pretty();
+    match &args.json_out {
+        Some(p) => {
+            if let Err(e) = std::fs::write(p, &summary) {
+                eprintln!("cognate_lint: cannot write {}: {e}", p.display());
+                std::process::exit(2);
+            }
+        }
+        None => print!("{summary}"),
+    }
+    if report.ok() {
+        eprintln!(
+            "cognate_lint: OK — {} files across {} clean under {} rules",
+            report.files_scanned,
+            SCAN_DIRS.join(", "),
+            ALL_RULES.len()
+        );
+    } else {
+        eprintln!(
+            "cognate_lint: {} finding(s) in {} files scanned",
+            report.findings.len(),
+            report.files_scanned
+        );
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The binary is a thin shell over util::lint, which carries the
+    // test weight (fixture self-tests + tests/lint.rs integration).
+}

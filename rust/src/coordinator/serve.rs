@@ -41,6 +41,10 @@
 //! registered through `registry()` directly, never the macros (a
 //! macro call site caches one name forever). Error replies of any kind
 //! bump `serve.errors_total`.
+//!
+//! This file is a `cognate-lint` panic-free zone: no `unwrap`/`expect`/
+//! `panic!`/slice indexing outside `#[cfg(test)]` — a malformed client
+//! payload must become a JSON error reply, never a dead shard thread.
 
 use crate::config::PlatformId;
 use crate::dataset::MatrixRecord;
@@ -344,13 +348,15 @@ impl Router {
         if self.done.load(Ordering::Acquire) {
             return Err(Box::new(job));
         }
-        let mut order: Vec<usize> = (0..self.shards.len()).collect();
-        order.sort_by_key(|&i| self.shards[i].depth.load(Ordering::Relaxed));
+        let mut order: Vec<&ShardHandle> = self.shards.iter().collect();
+        order.sort_by_key(|s| s.depth.load(Ordering::Relaxed));
+        let Some(&least) = order.first() else {
+            return Err(Box::new(job));
+        };
         crate::histogram!("serve.router_depth")
-            .observe(self.shards[order[0]].depth.load(Ordering::Relaxed) as u64);
+            .observe(least.depth.load(Ordering::Relaxed) as u64);
         let mut job = job;
-        for &i in &order {
-            let s = &self.shards[i];
+        for s in &order {
             s.depth.fetch_add(1, Ordering::Relaxed);
             match s.tx.try_send(job) {
                 Ok(()) => return Ok(()),
@@ -368,12 +374,11 @@ impl Router {
         // Every bounded queue is full (or its shard is gone): apply
         // backpressure by blocking on the least-loaded shard instead of
         // shedding the job.
-        let s = &self.shards[order[0]];
-        s.depth.fetch_add(1, Ordering::Relaxed);
-        match s.tx.send(job) {
+        least.depth.fetch_add(1, Ordering::Relaxed);
+        match least.tx.send(job) {
             Ok(()) => Ok(()),
             Err(mpsc::SendError(j)) => {
-                s.depth.fetch_sub(1, Ordering::Relaxed);
+                least.depth.fetch_sub(1, Ordering::Relaxed);
                 Err(Box::new(j))
             }
         }
@@ -464,15 +469,12 @@ fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: 
                     let resp = match scored {
                         Ok(scores) => {
                             let top = top_k(&scores, job.k);
+                            let top_scores: Vec<f64> =
+                                top.iter().filter_map(|&i| scores.get(i).copied()).collect();
                             Json::obj(vec![
                                 ("id", Json::Num(job.id as f64)),
                                 ("top", Json::arr_usize(&top)),
-                                (
-                                    "scores",
-                                    Json::arr_f64(
-                                        &top.iter().map(|&i| scores[i]).collect::<Vec<_>>(),
-                                    ),
-                                ),
+                                ("scores", Json::arr_f64(&top_scores)),
                                 (
                                     "latency_ms",
                                     Json::Num(job.arrived.elapsed().as_secs_f64() * 1e3),
@@ -595,9 +597,15 @@ fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
     Ok(())
 }
 
+/// Upper bound on request matrix dimensions. `rows`/`cols` size the CSR
+/// allocation before any nonzero is validated, so without a cap a
+/// single `{"rows": 1e18}` line would abort the process on a failed
+/// allocation — the one panic no error reply can catch.
+const MAX_DIM: usize = 1 << 26;
+
 /// Parse a scoring request. Never panics on malformed input — every
-/// missing/ill-typed field becomes an `Err` that the handler turns into
-/// an `{"error": ...}` reply.
+/// missing/ill-typed/oversized field becomes an `Err` that the handler
+/// turns into an `{"error": ...}` reply (and `serve.errors_total`).
 fn parse_request(req: &Json) -> Result<(i64, usize, Csr)> {
     let id = req.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
     let k = req.get("k").and_then(|v| v.as_usize()).unwrap_or(5);
@@ -609,6 +617,10 @@ fn parse_request(req: &Json) -> Result<(i64, usize, Csr)> {
         .get("cols")
         .and_then(|v| v.as_usize())
         .context("missing or invalid \"cols\"")?;
+    anyhow::ensure!(
+        rows <= MAX_DIM && cols <= MAX_DIM,
+        "matrix too large: rows/cols are capped at {MAX_DIM}"
+    );
     let coo_json = req
         .get("coo")
         .and_then(|v| v.as_arr())
@@ -617,8 +629,8 @@ fn parse_request(req: &Json) -> Result<(i64, usize, Csr)> {
     for e in coo_json {
         let t = e.as_arr().context("coo entry")?;
         anyhow::ensure!(t.len() >= 2, "coo entry needs [r, c] or [r, c, v]");
-        let r = t[0].as_usize().context("r")? as u32;
-        let c = t[1].as_usize().context("c")? as u32;
+        let r = t.first().and_then(|x| x.as_usize()).context("r")? as u32;
+        let c = t.get(1).and_then(|x| x.as_usize()).context("c")? as u32;
         let v = t.get(2).and_then(|x| x.as_f64()).unwrap_or(1.0) as f32;
         anyhow::ensure!((r as usize) < rows && (c as usize) < cols, "coo out of bounds");
         coo.push((r, c, v));
@@ -760,6 +772,23 @@ mod tests {
         let LingerPolicy::Adaptive { min, max } = p else { panic!("adaptive") };
         assert!(min <= max);
         assert_eq!(max, Duration::from_micros(100));
+    }
+
+    #[test]
+    fn parse_request_rejects_oversized_and_ragged_input() {
+        // Dimension cap: a huge `rows` must become an error reply, not
+        // an allocation abort.
+        let huge =
+            Json::parse(r#"{"rows": 281474976710656, "cols": 4, "coo": []}"#).unwrap();
+        assert!(parse_request(&huge).is_err());
+        // Ragged / ill-typed coo entries error instead of panicking.
+        let ragged = Json::parse(r#"{"rows": 2, "cols": 2, "coo": [[0]]}"#).unwrap();
+        assert!(parse_request(&ragged).is_err());
+        let bad = Json::parse(r#"{"rows": 2, "cols": 2, "coo": [["x", 1]]}"#).unwrap();
+        assert!(parse_request(&bad).is_err());
+        // At the cap itself, requests still parse.
+        let ok = Json::parse(r#"{"rows": 4, "cols": 4, "coo": [[0, 1, 2.0]]}"#).unwrap();
+        assert!(parse_request(&ok).is_ok());
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //! seed's equal-row-count split left most threads idle behind the one
 //! that drew the dense rows.
 
+// Determinism guard (clippy layer of the cognate-lint `determinism`
+// rule, backed by clippy.toml's disallowed lists): no hash-order
+// iteration or wall-clock reads in kernel code.
+#![warn(clippy::disallowed_methods, clippy::disallowed_types)]
+
 pub mod sddmm;
 pub mod spmm;
 

@@ -125,14 +125,18 @@ pub struct Runtime {
 }
 
 // SAFETY: the `xla` crate wraps PJRT objects in `Rc` + raw pointers, so
-// it is neither Send nor Sync by construction. We restore thread safety
-// by *policy*: every code path that touches the client or an executable
+// `Runtime` is not Send by construction. Ownership may still move
+// between threads because every touch of the client or an executable
 // (compile + execute + result fetch, all inside `exec`) runs while
-// holding `xla_lock`, so no two threads ever operate on (or clone the
-// Rc of) an xla object concurrently. Host-side `Tensor`s are plain
-// Vec<f32>. The PJRT CPU plugin itself is thread-safe for serialized
-// calls from different threads.
+// holding `xla_lock`, so the moving thread observes no xla object
+// mid-operation and never clones an `Rc` concurrently with another
+// thread. Host-side `Tensor`s are plain Vec<f32>.
 unsafe impl Send for Runtime {}
+// SAFETY: shared references are safe for the same reason as Send: all
+// xla state is behind `xla_lock` (and `compiled` behind its own Mutex),
+// so `&Runtime` from many threads serialises onto one PJRT call at a
+// time — the CPU plugin is thread-safe for serialized calls from
+// different threads. The remaining fields are read-only after `load`.
 unsafe impl Sync for Runtime {}
 
 impl Runtime {

@@ -15,6 +15,11 @@
 //! derived deterministically from `AnnealOpts::seed`, so results are
 //! reproducible and independent of the thread count.
 
+// Determinism guard (clippy layer of the cognate-lint `determinism`
+// rule, backed by clippy.toml's disallowed lists): SA decisions come
+// from the seeded `util::rng::Rng` only, never hash order or clocks.
+#![warn(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use crate::config::{knob_stride, radices, space_len, PlatformId};
 use crate::util::pool::par_map;
 use crate::util::rng::Rng;

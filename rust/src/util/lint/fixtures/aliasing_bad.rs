@@ -1,0 +1,10 @@
+// Seeded violation for `macro-instanced-aliasing`: the counter!-family
+// macros cache ONE &'static handle in a per-call-site OnceLock, so a
+// dynamic name aliases every shard onto whichever name registered
+// first. This exact bug shape is documented in ROADMAP.md §Telemetry.
+
+fn shard_loop(idx: usize) {
+    for _ in 0..4 {
+        crate::gauge!(&format!("serve.shard_linger_us.{idx}")).set(250.0);
+    }
+}

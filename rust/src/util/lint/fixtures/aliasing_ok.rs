@@ -1,0 +1,13 @@
+// Compliant twin of aliasing_bad.rs: instanced per-shard names are
+// registered ONCE at thread start through the registry call form, and
+// the handle is held for the life of the shard.
+
+fn shard_loop(idx: usize) {
+    let reg = crate::util::metrics::registry();
+    let linger = reg.gauge(&format!("serve.shard_linger_us.{}", idx));
+    let jobs = reg.counter(&format!("serve.shard_jobs_total.{}", idx));
+    for _ in 0..4 {
+        linger.set(250.0);
+        jobs.inc();
+    }
+}

@@ -1,0 +1,20 @@
+// Seeded violations for `determinism`. Self-tested under the virtual
+// path rust/src/kernels/fixture.rs — kernels and the SA score path
+// guarantee bitwise-identical results across runs and thread counts,
+// which random-state hashing and wall-clock reads both break.
+
+use std::collections::HashMap;
+
+fn schedule(rows: &[usize]) -> Vec<usize> {
+    let started = std::time::Instant::now();
+    let mut seen: HashMap<usize, usize> = HashMap::new();
+    for (i, &r) in rows.iter().enumerate() {
+        seen.insert(r, i);
+    }
+    // Iteration order here differs run to run.
+    let mut order: Vec<usize> = seen.values().copied().collect();
+    if started.elapsed().as_micros() > 100 {
+        order.reverse();
+    }
+    order
+}

@@ -1,0 +1,20 @@
+// Compliant twin of determinism_bad.rs: ordered containers, randomness
+// only through the crate's seeded Rng, and timing pushed to the
+// boundary via time_span! (which observes a histogram without feeding
+// any scheduling decision).
+
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+fn schedule(rows: &[usize], rng: &mut Rng) -> Vec<usize> {
+    crate::time_span!("bench.schedule_fixture_us", {
+        let mut seen: BTreeMap<usize, usize> = BTreeMap::new();
+        for (i, &r) in rows.iter().enumerate() {
+            seen.insert(r, i);
+        }
+        let mut order: Vec<usize> = seen.values().copied().collect();
+        let pivot = rng.next_usize(order.len().max(1));
+        order.rotate_left(pivot);
+        order
+    })
+}

@@ -1,0 +1,14 @@
+// Seeded violations for the `metric-canon` rule. This file is NOT
+// compiled or scanned by the repo walk (lint.toml excludes fixtures/);
+// it is include_str!-ed by the self-tests in util/lint/mod.rs.
+
+fn handle_job() {
+    // Off-canon name: nobody registered this with util::metrics::CANON.
+    crate::counter!("bogus.name").inc();
+    // Kind drift: serve.jobs_total is a counter in CANON.
+    crate::gauge!("serve.jobs_total").set(1.0);
+    // Shape violation: metric names are `layer.metric`, lowercase.
+    crate::counter!("NoDotsHere").inc();
+    // Duration histograms observe microseconds and must end `_us`.
+    crate::time_span!("serve.batch_window", { work() });
+}

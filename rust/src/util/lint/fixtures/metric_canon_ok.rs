@@ -1,0 +1,11 @@
+// Compliant twin of metric_canon_bad.rs: canonical names, matching
+// kinds, `_us` durations, and an allowlisted bench namespace.
+
+fn handle_job() {
+    crate::counter!("serve.jobs_total").inc();
+    crate::gauge!("serve.linger_us").set(250.0);
+    crate::time_span!("serve.featurize_us", { work() });
+    crate::histogram!("serve.batch_size").observe(8);
+    // `bench.` is allowlisted in lint.toml for scratch namespaces.
+    crate::counter!("bench.anything_goes").inc();
+}

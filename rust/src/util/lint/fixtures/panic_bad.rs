@@ -1,0 +1,17 @@
+// Seeded violations for `panic-audit`. Self-tested under the virtual
+// path rust/src/coordinator/serve.rs — a panic-free zone: any of these
+// would let a malformed client payload kill a batcher shard thread.
+
+fn parse_request(line: &str) -> (u64, usize) {
+    let parts: Vec<&str> = line.split(',').collect();
+    // Indexing panics on an empty split.
+    let head = parts[0];
+    // unwrap panics on a non-numeric id.
+    let id: u64 = head.parse().unwrap();
+    // expect is the same panic wearing a message.
+    let k: usize = parts.get(1).map(|s| s.parse().expect("k")).unwrap_or(5);
+    if k == 0 {
+        panic!("k must be positive");
+    }
+    (id, k)
+}

@@ -1,0 +1,14 @@
+// Seeded violations for `safety-comment`: unsafe without an adjacent
+// SAFETY argument, and a comment separated from its unsafe by code.
+
+struct SendPtr(*mut f64);
+
+unsafe impl Send for SendPtr {}
+
+fn write_slot(p: &SendPtr, i: usize, v: f64) {
+    // SAFETY: this comment is orphaned by the statement below.
+    let off = i * 2;
+    unsafe {
+        *p.0.add(off) = v;
+    }
+}

@@ -1,0 +1,18 @@
+// Compliant twin of safety_bad.rs: every unsafe carries its own
+// immediately preceding SAFETY comment (multi-line blocks count as
+// long as no code or blank line intervenes).
+
+struct SendPtr(*mut f64);
+
+// SAFETY: SendPtr is only constructed over a slice that outlives the
+// scope, and each worker writes a disjoint index range.
+unsafe impl Send for SendPtr {}
+
+fn write_slot(p: &SendPtr, i: usize, v: f64) {
+    let off = i * 2;
+    // SAFETY: `off` is bounded by the pre-sized slot count checked by
+    // the caller; no two callers share an index.
+    unsafe {
+        *p.0.add(off) = v;
+    }
+}

@@ -1,0 +1,475 @@
+//! `cognate-lint`: a dependency-free static analysis pass over the
+//! crate's own sources.
+//!
+//! The rules (see [`rules`]) mechanically enforce invariants that
+//! previously lived only as ROADMAP prose: metric names must match
+//! `util::metrics::CANON` (and the ROADMAP table must match both),
+//! `counter!`-family macros must never be handed dynamic names, every
+//! `unsafe` needs an adjacent `// SAFETY:` argument, the serve request
+//! path and metrics hot paths stay panic-free, and the kernels / SA
+//! score paths stay deterministic.
+//!
+//! Three front doors, all sharing [`lint_repo`]:
+//!
+//! - `cargo run --release --bin cognate_lint` — CLI with JSON summary
+//! - `tests/lint.rs` — gates `cargo test -q` on zero findings at HEAD
+//! - `scripts/verify.sh` — the `== lint ==` stage
+//!
+//! Per-repo configuration lives in `lint.toml` at the repo root (a
+//! deliberately tiny TOML subset: `[section]` headers and
+//! `key = ["…"]` string arrays). Inline escapes use
+//! `// lint:allow(<rule>) reason` — the reason is mandatory.
+
+pub mod rules;
+pub mod tokens;
+
+pub use rules::{Finding, ALL_RULES};
+
+use crate::util::json::Json;
+use crate::util::metrics::CANON;
+use rules::{check_unused_canon, FileCtx, RULE_METRIC_CANON};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+/// Directories scanned under the repo root, in order.
+pub const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Options loaded from `lint.toml` (all default to empty).
+#[derive(Clone, Debug, Default)]
+pub struct LintOptions {
+    /// `[metric-canon] allow_prefixes`: name prefixes exempt from the
+    /// canon lookup (bench/test namespaces).
+    pub allow_prefixes: Vec<String>,
+    /// `[scan] exclude`: repo-relative path substrings to skip —
+    /// notably the seeded-violation fixtures under `util/lint/fixtures/`.
+    pub exclude: Vec<String>,
+}
+
+impl LintOptions {
+    /// Parse the `lint.toml` subset: `[section]` lines and
+    /// `key = ["a", "b"]` string-array lines; `#` comments; anything
+    /// else is ignored (unknown keys must not brick the linter).
+    pub fn parse_toml(src: &str) -> LintOptions {
+        let mut opts = LintOptions::default();
+        let mut section = String::new();
+        for raw in src.lines() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else { continue };
+            let (key, val) = (key.trim(), val.trim());
+            if !val.starts_with('[') {
+                continue;
+            }
+            let items: Vec<String> = val
+                .trim_start_matches('[')
+                .trim_end_matches(']')
+                .split(',')
+                .map(|s| s.trim().trim_matches('"').to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            match (section.as_str(), key) {
+                ("metric-canon", "allow_prefixes") => opts.allow_prefixes = items,
+                ("scan", "exclude") => opts.exclude = items,
+                _ => {}
+            }
+        }
+        opts
+    }
+
+    pub fn load(root: &Path) -> LintOptions {
+        match std::fs::read_to_string(root.join("lint.toml")) {
+            Ok(src) => LintOptions::parse_toml(&src),
+            Err(_) => LintOptions::default(),
+        }
+    }
+
+    fn excluded(&self, rel: &str) -> bool {
+        self.exclude.iter().any(|pat| rel.contains(pat.as_str()))
+    }
+}
+
+/// Result of a full-repo run.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable summary (sorted keys, stable across runs).
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("path", Json::Str(f.path.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("rule", Json::Str(f.rule.to_string())),
+                    ("msg", Json::Str(f.msg.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("findings", Json::Arr(findings)),
+            ("rules", Json::arr_str(&ALL_RULES)),
+        ])
+    }
+
+    /// Human-readable `path:line: rule: message` lines.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Lint one source text under a virtual repo-relative path. This is the
+/// unit the fixture self-tests drive; corpus-level checks (unused canon
+/// entries, ROADMAP drift) only run in [`lint_repo`].
+pub fn lint_source(path: &str, src: &str, opts: &LintOptions) -> Vec<Finding> {
+    let ctx = FileCtx::new(path, src);
+    let mut used = BTreeSet::new();
+    let mut findings = rules::lint_file_ctx(&ctx, &opts.allow_prefixes, &mut used);
+    findings.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
+    findings
+}
+
+/// Walk up from `start` to the repo root, identified by the `rust/src`
+/// tree plus `ROADMAP.md` (works whether the manifest lives at the
+/// root or under `rust/`).
+pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start);
+    while let Some(dir) = cur {
+        if dir.join("rust/src").is_dir() && dir.join("ROADMAP.md").is_file() {
+            return Some(dir.to_path_buf());
+        }
+        cur = dir.parent();
+    }
+    None
+}
+
+/// Root discovery for the binary: `COGNATE_LINT_ROOT` wins, then the
+/// current directory, then the build-time manifest dir.
+pub fn discover_root() -> Option<PathBuf> {
+    if let Ok(root) = std::env::var("COGNATE_LINT_ROOT") {
+        return find_repo_root(Path::new(&root));
+    }
+    if let Ok(cwd) = std::env::current_dir() {
+        if let Some(root) = find_repo_root(&cwd) {
+            return Some(root);
+        }
+    }
+    if let Ok(man) = std::env::var("CARGO_MANIFEST_DIR") {
+        return find_repo_root(Path::new(&man));
+    }
+    None
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Line (1-based) of each CANON name's defining literal in
+/// `util/metrics.rs`, so unused-entry diagnostics point at the entry.
+fn canon_def_lines(metrics_src: &str) -> BTreeMap<String, u32> {
+    let mut out = BTreeMap::new();
+    for (idx, line) in metrics_src.lines().enumerate() {
+        for (name, _) in CANON {
+            let needle = format!("\"{name}\"");
+            if line.contains(&needle) {
+                out.entry(name.to_string()).or_insert(idx as u32 + 1);
+            }
+        }
+    }
+    out
+}
+
+/// Cross-check the ROADMAP metric table against CANON, both ways. Table
+/// rows are `| `name` | kind | meaning |` — any backticked token in the
+/// first cell whose kind cell is a metric kind is a declared name.
+fn check_roadmap_table(roadmap: &str, out: &mut Vec<Finding>) {
+    let kinds = ["counter", "gauge", "histogram"];
+    let mut declared: BTreeMap<String, (u32, String)> = BTreeMap::new();
+    for (idx, line) in roadmap.lines().enumerate() {
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        // `| a | b | c |` splits into ["", a, b, c, ""].
+        if cells.len() < 4 || !kinds.contains(&cells[2]) {
+            continue;
+        }
+        let mut rest = cells[1];
+        while let Some(open) = rest.find('`') {
+            let Some(close) = rest[open + 1..].find('`') else { break };
+            let name = &rest[open + 1..open + 1 + close];
+            declared.insert(name.to_string(), (idx as u32 + 1, cells[2].to_string()));
+            rest = &rest[open + 2 + close..];
+        }
+    }
+    for (name, (line, kind)) in &declared {
+        match crate::util::metrics::canon_kind(name) {
+            None => out.push(Finding {
+                path: "ROADMAP.md".to_string(),
+                line: *line,
+                rule: RULE_METRIC_CANON,
+                msg: format!(
+                    "ROADMAP table declares {name:?} but util::metrics::CANON does not — the \
+                     table, the canon, and the code must move together"
+                ),
+            }),
+            Some(k) => {
+                let canon_kind_name = match k {
+                    crate::util::metrics::Kind::Counter => "counter",
+                    crate::util::metrics::Kind::Gauge => "gauge",
+                    crate::util::metrics::Kind::Histogram => "histogram",
+                };
+                if canon_kind_name != kind {
+                    out.push(Finding {
+                        path: "ROADMAP.md".to_string(),
+                        line: *line,
+                        rule: RULE_METRIC_CANON,
+                        msg: format!(
+                            "ROADMAP table says {name:?} is a {kind} but CANON says {canon_kind_name}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    for (name, _) in CANON {
+        if !declared.contains_key(*name) {
+            out.push(Finding {
+                path: "ROADMAP.md".to_string(),
+                line: 0,
+                rule: RULE_METRIC_CANON,
+                msg: format!(
+                    "CANON entry {name:?} is missing from the ROADMAP metric table — document \
+                     it in the same PR that adds it"
+                ),
+            });
+        }
+    }
+}
+
+/// Lint the whole repo rooted at `root`: every `.rs` file under
+/// [`SCAN_DIRS`], then the corpus-level canon/ROADMAP drift checks.
+pub fn lint_repo(root: &Path) -> std::io::Result<Report> {
+    let opts = LintOptions::load(root);
+    let mut files = Vec::new();
+    for dir in SCAN_DIRS {
+        collect_rs_files(&root.join(dir), &mut files);
+    }
+    let mut findings = Vec::new();
+    let mut used: BTreeSet<String> = BTreeSet::new();
+    let mut def_lines = BTreeMap::new();
+    let mut files_scanned = 0usize;
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if opts.excluded(&rel) {
+            continue;
+        }
+        let src = std::fs::read_to_string(path)?;
+        if rel.ends_with("util/metrics.rs") {
+            def_lines = canon_def_lines(&src);
+        }
+        let ctx = FileCtx::new(&rel, &src);
+        findings.extend(rules::lint_file_ctx(&ctx, &opts.allow_prefixes, &mut used));
+        files_scanned += 1;
+    }
+    check_unused_canon(&used, &def_lines, &mut findings);
+    match std::fs::read_to_string(root.join("ROADMAP.md")) {
+        Ok(roadmap) => check_roadmap_table(&roadmap, &mut findings),
+        Err(e) => {
+            return Err(std::io::Error::new(
+                e.kind(),
+                format!("ROADMAP.md unreadable under {}: {e}", root.display()),
+            ))
+        }
+    }
+    findings.sort_by(|a, b| {
+        a.path.cmp(&b.path).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule))
+    });
+    Ok(Report { findings, files_scanned })
+}
+
+// ---- fixture-driven self-tests --------------------------------------------
+//
+// Each rule ships a seeded-violation fixture and a compliant twin under
+// `fixtures/`. The repo walk skips that directory (`[scan] exclude` in
+// lint.toml); these tests are the only consumer, via include_str!, so a
+// regression in any rule turns `cargo test -q` red with the exact
+// diagnostic the CLI would print.
+
+#[cfg(test)]
+mod fixture_tests {
+    use super::*;
+
+    fn opts() -> LintOptions {
+        LintOptions {
+            allow_prefixes: vec!["bench.".into(), "metrics.test.".into(), "t.".into()],
+            exclude: vec![],
+        }
+    }
+
+    /// The bad fixture must fire exactly `rule`; the ok twin must be
+    /// silent. Virtual paths put path-scoped rules in scope.
+    fn check_pair(rule: &str, vpath: &str, bad: &str, ok: &str) {
+        let bad_findings = lint_source(vpath, bad, &opts());
+        assert!(
+            bad_findings.iter().any(|f| f.rule == rule),
+            "fixture for {rule} did not fire: {bad_findings:?}"
+        );
+        assert!(
+            bad_findings.iter().all(|f| f.rule == rule),
+            "fixture for {rule} fired extra rules: {bad_findings:?}"
+        );
+        for f in &bad_findings {
+            assert_eq!(f.path, vpath);
+            assert!(f.line > 0, "finding without a line: {f:?}");
+        }
+        let ok_findings = lint_source(vpath, ok, &opts());
+        assert!(ok_findings.is_empty(), "compliant twin for {rule} fired: {ok_findings:?}");
+    }
+
+    #[test]
+    fn metric_canon_fixture() {
+        check_pair(
+            "metric-canon",
+            "rust/src/coordinator/fixture.rs",
+            include_str!("fixtures/metric_canon_bad.rs"),
+            include_str!("fixtures/metric_canon_ok.rs"),
+        );
+    }
+
+    #[test]
+    fn aliasing_fixture() {
+        check_pair(
+            "macro-instanced-aliasing",
+            "rust/src/coordinator/fixture.rs",
+            include_str!("fixtures/aliasing_bad.rs"),
+            include_str!("fixtures/aliasing_ok.rs"),
+        );
+    }
+
+    #[test]
+    fn safety_fixture() {
+        check_pair(
+            "safety-comment",
+            "rust/src/util/fixture.rs",
+            include_str!("fixtures/safety_bad.rs"),
+            include_str!("fixtures/safety_ok.rs"),
+        );
+    }
+
+    #[test]
+    fn panic_fixture() {
+        check_pair(
+            "panic-audit",
+            "rust/src/coordinator/serve.rs",
+            include_str!("fixtures/panic_bad.rs"),
+            include_str!("fixtures/panic_ok.rs"),
+        );
+    }
+
+    #[test]
+    fn determinism_fixture() {
+        check_pair(
+            "determinism",
+            "rust/src/kernels/fixture.rs",
+            include_str!("fixtures/determinism_bad.rs"),
+            include_str!("fixtures/determinism_ok.rs"),
+        );
+    }
+}
+
+#[cfg(test)]
+mod config_tests {
+    use super::*;
+
+    #[test]
+    fn toml_subset_parses_sections_and_arrays() {
+        let src = r#"
+# cognate-lint configuration
+[metric-canon]
+allow_prefixes = ["bench.", "metrics.test.", "t."]  # test namespaces
+
+[scan]
+exclude = ["util/lint/fixtures/"]
+"#;
+        let opts = LintOptions::parse_toml(src);
+        assert_eq!(opts.allow_prefixes, vec!["bench.", "metrics.test.", "t."]);
+        assert_eq!(opts.exclude, vec!["util/lint/fixtures/"]);
+        assert!(opts.excluded("rust/src/util/lint/fixtures/safety_bad.rs"));
+        assert!(!opts.excluded("rust/src/util/lint/mod.rs"));
+    }
+
+    #[test]
+    fn unknown_keys_and_garbage_are_ignored() {
+        let opts = LintOptions::parse_toml("[future]\nknob = [\"x\"]\nnot toml at all\n");
+        assert!(opts.allow_prefixes.is_empty());
+        assert!(opts.exclude.is_empty());
+    }
+
+    #[test]
+    fn roadmap_cross_check_flags_drift_both_ways() {
+        // A name the canon doesn't know.
+        let mut out = Vec::new();
+        let table = "| name | kind | meaning |\n|---|---|---|\n| `rogue.metric` | counter | ? |\n";
+        check_roadmap_table(table, &mut out);
+        assert!(out.iter().any(|f| f.msg.contains("rogue.metric")), "{out:?}");
+        // A canon entry the table omits (every entry, with this table).
+        assert!(out.iter().any(|f| f.msg.contains("serve.jobs_total")), "{out:?}");
+        // Kind drift.
+        let mut out2 = Vec::new();
+        let table2 = "| `serve.jobs_total` | gauge | drifted |\n";
+        check_roadmap_table(table2, &mut out2);
+        assert!(
+            out2.iter().any(|f| f.msg.contains("gauge") && f.msg.contains("counter")),
+            "{out2:?}"
+        );
+    }
+
+    #[test]
+    fn report_json_is_parseable_and_sorted() {
+        let report = Report {
+            findings: vec![Finding {
+                path: "rust/src/x.rs".into(),
+                line: 3,
+                rule: "metric-canon",
+                msg: "m".into(),
+            }],
+            files_scanned: 7,
+        };
+        let s = report.to_json().to_string();
+        let back = Json::parse(&s).expect("report JSON must parse");
+        assert_eq!(back.to_string(), s);
+        assert!(report.render().contains("rust/src/x.rs:3: metric-canon: m"));
+        assert!(!report.ok());
+    }
+}

@@ -1,0 +1,818 @@
+//! The `cognate-lint` rule passes.
+//!
+//! Each rule is a pure function over a [`FileCtx`] (tokens + derived
+//! line maps) that appends [`Finding`]s. Rules are lexical by design:
+//! they key on token sequences, never on type information, so they can
+//! run dependency-free in any environment — including the growth
+//! container, which has no Rust toolchain at all.
+//!
+//! | rule | what it enforces |
+//! |---|---|
+//! | `metric-canon` | metric name literals match `util::metrics::CANON`, are `layer.metric` shaped, durations end `_us`, kinds agree |
+//! | `macro-instanced-aliasing` | `counter!`-family name args are plain string literals (the per-call-site `OnceLock` aliases dynamic names) |
+//! | `safety-comment` | every `unsafe` is immediately preceded by a `// SAFETY:` comment |
+//! | `panic-audit` | no `unwrap()`/`expect(`/`panic!`/slice-indexing in the serve request path or metrics hot paths (outside `#[cfg(test)]`) |
+//! | `determinism` | no `HashMap`/`HashSet`/`SystemTime`/`Instant::now` in `kernels/` or `search/anneal.rs` (use `util::rng::Rng`) |
+//!
+//! Any finding can be suppressed with `// lint:allow(<rule>) reason` on
+//! the same line or the line directly above — the reason is mandatory.
+
+use super::tokens::{tokenize, Tok, Token};
+use crate::util::metrics::{canon_kind, Kind, CANON};
+use std::collections::{BTreeMap, BTreeSet};
+
+pub const RULE_METRIC_CANON: &str = "metric-canon";
+pub const RULE_ALIASING: &str = "macro-instanced-aliasing";
+pub const RULE_SAFETY: &str = "safety-comment";
+pub const RULE_PANIC: &str = "panic-audit";
+pub const RULE_DETERMINISM: &str = "determinism";
+
+pub const ALL_RULES: [&str; 5] = [
+    RULE_METRIC_CANON,
+    RULE_ALIASING,
+    RULE_SAFETY,
+    RULE_PANIC,
+    RULE_DETERMINISM,
+];
+
+/// One diagnostic, rendered as `path:line: rule: message`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: {}: {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Per-file lint state derived once, shared by every rule pass.
+pub struct FileCtx {
+    /// Repo-relative path with `/` separators (rules scope on it).
+    pub path: String,
+    toks: Vec<Token>,
+    /// Indices into `toks` of non-comment tokens.
+    sig: Vec<usize>,
+    /// Concatenated comment text per line (block comments register on
+    /// every line they span).
+    comment_text: BTreeMap<u32, String>,
+    /// Lines carrying at least one non-comment token.
+    code_lines: BTreeSet<u32>,
+    /// Inclusive line ranges of `#[cfg(test)]` items.
+    test_spans: Vec<(u32, u32)>,
+    /// `lint:allow(rule)` directives: line → (rule, reason-present).
+    allows: BTreeMap<u32, Vec<(String, bool)>>,
+}
+
+impl FileCtx {
+    pub fn new(path: &str, src: &str) -> FileCtx {
+        let toks = tokenize(src);
+        let mut sig = Vec::with_capacity(toks.len());
+        let mut comment_text: BTreeMap<u32, String> = BTreeMap::new();
+        let mut code_lines = BTreeSet::new();
+        let mut allows: BTreeMap<u32, Vec<(String, bool)>> = BTreeMap::new();
+        for (i, t) in toks.iter().enumerate() {
+            match &t.kind {
+                Tok::Comment(text) => {
+                    for (off, part) in text.split('\n').enumerate() {
+                        let line = t.line + off as u32;
+                        let slot = comment_text.entry(line).or_default();
+                        slot.push_str(part);
+                        slot.push(' ');
+                        for (rule, has_reason) in parse_allows(part) {
+                            allows.entry(line).or_default().push((rule, has_reason));
+                        }
+                    }
+                }
+                _ => {
+                    sig.push(i);
+                    code_lines.insert(t.line);
+                }
+            }
+        }
+        let test_spans = find_test_spans(&toks, &sig);
+        FileCtx { path: path.to_string(), toks, sig, comment_text, code_lines, test_spans, allows }
+    }
+
+    fn tok(&self, s: usize) -> Option<&Token> {
+        self.sig.get(s).map(|&i| &self.toks[i])
+    }
+
+    fn kind(&self, s: usize) -> Option<&Tok> {
+        self.tok(s).map(|t| &t.kind)
+    }
+
+    fn is_punct(&self, s: usize, c: char) -> bool {
+        matches!(self.kind(s), Some(Tok::Punct(p)) if *p == c)
+    }
+
+    fn is_ident(&self, s: usize, name: &str) -> bool {
+        matches!(self.kind(s), Some(Tok::Ident(id)) if id == name)
+    }
+
+    fn line(&self, s: usize) -> u32 {
+        self.tok(s).map(|t| t.line).unwrap_or(0)
+    }
+
+    fn in_test_span(&self, line: u32) -> bool {
+        self.test_spans.iter().any(|&(a, b)| (a..=b).contains(&line))
+    }
+
+    /// Significant-token index just past the delimiter that closes the
+    /// `(` expected at `open` (supports nesting of all bracket kinds).
+    fn past_matching_close(&self, open: usize) -> usize {
+        let mut depth = 0usize;
+        let mut s = open;
+        while let Some(k) = self.kind(s) {
+            match k {
+                Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        return s + 1;
+                    }
+                }
+                _ => {}
+            }
+            s += 1;
+        }
+        s
+    }
+
+    /// True when the finding at `line` is suppressed by a well-formed
+    /// `// lint:allow(<rule>) reason` on that line or the line above.
+    fn allowed(&self, rule: &str, line: u32) -> bool {
+        [line, line.saturating_sub(1)].iter().any(|l| {
+            self.allows
+                .get(l)
+                .is_some_and(|v| v.iter().any(|(r, reason)| r == rule && *reason))
+        })
+    }
+
+    fn push(&self, out: &mut Vec<Finding>, rule: &'static str, line: u32, msg: String) {
+        if !self.allowed(rule, line) {
+            out.push(Finding { path: self.path.clone(), line, rule, msg });
+        }
+    }
+}
+
+/// Extract `lint:allow(rule)` directives from one comment line. The
+/// boolean records whether a non-empty reason follows the closing paren
+/// — an allow without a reason never suppresses anything.
+fn parse_allows(comment: &str) -> Vec<(String, bool)> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(at) = rest.find("lint:allow(") {
+        rest = &rest[at + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else { break };
+        let rule = rest[..close].trim().to_string();
+        rest = &rest[close + 1..];
+        let reason_end = rest.find("lint:allow(").unwrap_or(rest.len());
+        let has_reason = !rest[..reason_end].trim().is_empty();
+        if !rule.is_empty() {
+            out.push((rule, has_reason));
+        }
+    }
+    out
+}
+
+/// Line spans of items under `#[cfg(test)]` (the attribute's line down
+/// to the closing brace of the item body). Items without a brace body
+/// (`use`, type aliases) contribute no span.
+fn find_test_spans(toks: &[Token], sig: &[usize]) -> Vec<(u32, u32)> {
+    let kind = |s: usize| sig.get(s).map(|&i| &toks[i].kind);
+    let is_p = |s: usize, c: char| matches!(kind(s), Some(Tok::Punct(p)) if *p == c);
+    let mut spans = Vec::new();
+    let mut s = 0usize;
+    while s < sig.len() {
+        // `# [ cfg ( … test … ) ]`
+        let is_cfg_test = is_p(s, '#')
+            && is_p(s + 1, '[')
+            && matches!(kind(s + 2), Some(Tok::Ident(id)) if id == "cfg")
+            && is_p(s + 3, '(')
+            && {
+                let mut t = s + 4;
+                let mut depth = 1usize;
+                let mut seen_test = false;
+                while depth > 0 {
+                    match kind(t) {
+                        None => break,
+                        Some(Tok::Punct('(')) => depth += 1,
+                        Some(Tok::Punct(')')) => depth -= 1,
+                        Some(Tok::Ident(id)) if id == "test" => seen_test = true,
+                        _ => {}
+                    }
+                    t += 1;
+                }
+                seen_test
+            };
+        if !is_cfg_test {
+            s += 1;
+            continue;
+        }
+        let start_line = toks[sig[s]].line;
+        // Find the item body `{ … }` (give up at `;` — no body).
+        let mut t = s + 4;
+        loop {
+            match kind(t) {
+                None => return spans,
+                Some(Tok::Punct(';')) => break,
+                Some(Tok::Punct('{')) => {
+                    let mut depth = 0usize;
+                    while let Some(k) = kind(t) {
+                        match k {
+                            Tok::Punct('{') => depth += 1,
+                            Tok::Punct('}') => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    spans.push((start_line, toks[sig[t]].line));
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        t += 1;
+                    }
+                    break;
+                }
+                _ => t += 1,
+            }
+        }
+        s = t.max(s + 1);
+    }
+    spans
+}
+
+// ---- rule: metric-canon ----------------------------------------------------
+
+/// Normalize a `format!` template to the canon's instanced form:
+/// `serve.shard_jobs_total.{}` → `serve.shard_jobs_total.<i>`.
+fn normalize_instanced(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    let mut depth = 0usize;
+    for c in name.chars() {
+        match c {
+            '{' => {
+                if depth == 0 {
+                    out.push_str("<i>");
+                }
+                depth += 1;
+            }
+            '}' => depth = depth.saturating_sub(1),
+            c if depth == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// `layer.metric` shape: ≥ 2 dot-separated segments, each nonempty and
+/// either `[a-z0-9_]+` or the instanced marker `<i>`.
+fn is_canon_shaped(name: &str) -> bool {
+    let segs: Vec<&str> = name.split('.').collect();
+    segs.len() >= 2
+        && segs.iter().all(|s| {
+            *s == "<i>"
+                || (!s.is_empty()
+                    && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'))
+        })
+}
+
+fn kind_name(k: Kind) -> &'static str {
+    match k {
+        Kind::Counter => "counter",
+        Kind::Gauge => "gauge",
+        Kind::Histogram => "histogram",
+    }
+}
+
+/// Metric-name checks shared by the macro and `registry()` call forms.
+#[allow(clippy::too_many_arguments)]
+fn check_metric_name(
+    ctx: &FileCtx,
+    out: &mut Vec<Finding>,
+    used: &mut BTreeSet<String>,
+    line: u32,
+    name: &str,
+    expect: Kind,
+    via: &str,
+    allow_prefixes: &[String],
+) {
+    if !is_canon_shaped(name) {
+        ctx.push(
+            out,
+            RULE_METRIC_CANON,
+            line,
+            format!("metric name {name:?} is not `layer.metric` shaped (lowercase dotted segments)"),
+        );
+        return;
+    }
+    match canon_kind(name) {
+        Some(k) => {
+            used.insert(name.to_string());
+            if k != expect {
+                ctx.push(
+                    out,
+                    RULE_METRIC_CANON,
+                    line,
+                    format!(
+                        "{name:?} is a {} in util::metrics::CANON but is used here via {via} (a {})",
+                        kind_name(k),
+                        kind_name(expect)
+                    ),
+                );
+            }
+        }
+        None => {
+            if !allow_prefixes.iter().any(|p| name.starts_with(p.as_str())) {
+                ctx.push(
+                    out,
+                    RULE_METRIC_CANON,
+                    line,
+                    format!(
+                        "{name:?} is not in util::metrics::CANON — add it there (and to the \
+                         ROADMAP table) in the same PR, or allowlist its prefix in lint.toml"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn macro_kind(name: &str) -> Option<Kind> {
+    match name {
+        "counter" => Some(Kind::Counter),
+        "gauge" => Some(Kind::Gauge),
+        "histogram" | "time_span" => Some(Kind::Histogram),
+        _ => None,
+    }
+}
+
+/// Rules 1 + 2 share one walk over the macro / registry call sites.
+/// `used` accumulates canon names referenced anywhere in the corpus for
+/// the unused-entry check in `lint_repo`.
+pub fn check_metrics_and_aliasing(
+    ctx: &FileCtx,
+    allow_prefixes: &[String],
+    used: &mut BTreeSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    for s in 0..ctx.sig.len() {
+        // Macro form: `name ! ( … )`.
+        if let Some(Tok::Ident(mac)) = ctx.kind(s) {
+            if let Some(expect) = macro_kind(mac) {
+                if ctx.is_punct(s + 1, '!') && ctx.is_punct(s + 2, '(') {
+                    let line = ctx.line(s);
+                    match ctx.kind(s + 3) {
+                        // `$name` inside macro_rules! definitions.
+                        Some(Tok::Punct('$')) => {}
+                        Some(Tok::Str(name)) => {
+                            let name = name.clone();
+                            check_metric_name(
+                                ctx,
+                                out,
+                                used,
+                                line,
+                                &name,
+                                expect,
+                                &format!("{mac}!"),
+                                allow_prefixes,
+                            );
+                            if mac == "time_span" && !name.ends_with("_us") {
+                                ctx.push(
+                                    out,
+                                    RULE_METRIC_CANON,
+                                    line,
+                                    format!(
+                                        "time_span! observes microseconds — {name:?} must end in `_us`"
+                                    ),
+                                );
+                            }
+                            if mac == "histogram" {
+                                let after = ctx.past_matching_close(s + 2);
+                                if ctx.is_punct(after, '.')
+                                    && ctx.is_ident(after + 1, "observe_duration")
+                                    && !name.ends_with("_us")
+                                {
+                                    ctx.push(
+                                        out,
+                                        RULE_METRIC_CANON,
+                                        line,
+                                        format!(
+                                            "duration histogram {name:?} must end in `_us` \
+                                             (observe_duration records microseconds)"
+                                        ),
+                                    );
+                                }
+                            }
+                        }
+                        _ => {
+                            ctx.push(
+                                out,
+                                RULE_ALIASING,
+                                line,
+                                format!(
+                                    "{mac}! caches ONE name per call site in a OnceLock — a \
+                                     dynamic name aliases every instance onto the first \
+                                     registration; pass a plain string literal, or register \
+                                     instanced names once via registry().{}(&format!(…)) and \
+                                     hold the handle",
+                                    kind_name(expect)
+                                ),
+                            );
+                        }
+                    }
+                    continue;
+                }
+            }
+        }
+        // Registry-call form: `. counter|gauge|histogram ( … )`.
+        if s > 0 && ctx.is_punct(s - 1, '.') {
+            if let Some(Tok::Ident(meth)) = ctx.kind(s) {
+                let Some(expect) = macro_kind(meth) else { continue };
+                if meth == "time_span" || !ctx.is_punct(s + 1, '(') {
+                    continue;
+                }
+                let line = ctx.line(s);
+                // Inspect the argument tokens for a resolvable name.
+                let close = ctx.past_matching_close(s + 1);
+                let mut t = s + 2;
+                while ctx.is_punct(t, '&') {
+                    t += 1;
+                }
+                if let Some(Tok::Str(name)) = ctx.kind(t) {
+                    let name = name.clone();
+                    check_metric_name(
+                        ctx, out, used, line, &name, expect,
+                        &format!(".{meth}()"), allow_prefixes,
+                    );
+                } else if ctx.is_ident(t, "format")
+                    && ctx.is_punct(t + 1, '!')
+                    && ctx.is_punct(t + 2, '(')
+                {
+                    if let Some(Tok::Str(template)) = ctx.kind(t + 3) {
+                        let name = normalize_instanced(template);
+                        check_metric_name(
+                            ctx, out, used, line, &name, expect,
+                            &format!(".{meth}(&format!(…))"), allow_prefixes,
+                        );
+                    }
+                }
+                // Anything else (a plain variable) is unresolvable
+                // statically — skipped, the runtime registry still
+                // type-checks it.
+                let _ = close;
+            }
+        }
+    }
+}
+
+// ---- rule: safety-comment --------------------------------------------------
+
+pub fn check_safety_comments(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    for s in 0..ctx.sig.len() {
+        if !ctx.is_ident(s, "unsafe") {
+            continue;
+        }
+        let line = ctx.line(s);
+        // Same-line trailing/leading comment counts, then walk up over
+        // the directly attached comment block (no blank or code lines
+        // in between — "immediately preceding" is the contract).
+        let mut found = ctx
+            .comment_text
+            .get(&line)
+            .is_some_and(|c| c.contains("SAFETY:"));
+        let mut l = line.saturating_sub(1);
+        while !found && l > 0 {
+            match ctx.comment_text.get(&l) {
+                Some(c) if !ctx.code_lines.contains(&l) => {
+                    found = c.contains("SAFETY:");
+                    if found {
+                        break;
+                    }
+                    l -= 1;
+                }
+                _ => break,
+            }
+        }
+        if !found {
+            ctx.push(
+                out,
+                RULE_SAFETY,
+                line,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment arguing the \
+                 invariant"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---- rule: panic-audit -----------------------------------------------------
+
+/// Files whose non-test code must stay panic-free: the serve request
+/// path and the metrics hot paths.
+pub fn panic_audit_applies(path: &str) -> bool {
+    path.ends_with("coordinator/serve.rs") || path.ends_with("util/metrics.rs")
+}
+
+/// Puncts/keywords before `[` that mean "not an indexing expression"
+/// (type syntax, array literals, attributes, slice patterns, macros).
+fn is_index_context(prev: Option<&Tok>) -> bool {
+    match prev {
+        Some(Tok::Ident(id)) => {
+            !matches!(id.as_str(), "in" | "if" | "else" | "match" | "return" | "mut" | "dyn" | "as")
+        }
+        Some(Tok::Punct(')')) | Some(Tok::Punct(']')) => true,
+        _ => false,
+    }
+}
+
+pub fn check_panic_audit(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !panic_audit_applies(&ctx.path) {
+        return;
+    }
+    for s in 0..ctx.sig.len() {
+        let line = ctx.line(s);
+        if ctx.in_test_span(line) {
+            continue;
+        }
+        match ctx.kind(s) {
+            Some(Tok::Ident(id)) if (id == "unwrap" || id == "expect") => {
+                if s > 0 && ctx.is_punct(s - 1, '.') && ctx.is_punct(s + 1, '(') {
+                    ctx.push(
+                        out,
+                        RULE_PANIC,
+                        line,
+                        format!(
+                            ".{id}() can panic — this file is a panic-free zone (a malformed \
+                             request must become an error reply, not kill a shard thread); \
+                             return a Result or use unwrap_or/_else"
+                        ),
+                    );
+                }
+            }
+            Some(Tok::Ident(id)) if id == "panic" => {
+                if ctx.is_punct(s + 1, '!') {
+                    ctx.push(
+                        out,
+                        RULE_PANIC,
+                        line,
+                        "panic! in a panic-free zone — bump serve.errors_total and reply with \
+                         JSON instead"
+                            .to_string(),
+                    );
+                }
+            }
+            Some(Tok::Punct('[')) => {
+                if s > 0 && is_index_context(ctx.kind(s - 1)) {
+                    ctx.push(
+                        out,
+                        RULE_PANIC,
+                        line,
+                        "slice indexing can panic on out-of-bounds — use .get()/.first() (or \
+                         iterators) in panic-free zones"
+                            .to_string(),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---- rule: determinism -----------------------------------------------------
+
+/// Modules whose score paths must stay bitwise-deterministic and
+/// resume-safe: the executable kernels and the SA searcher.
+pub fn determinism_applies(path: &str) -> bool {
+    path.contains("/kernels/") || path.ends_with("search/anneal.rs")
+}
+
+pub fn check_determinism(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !determinism_applies(&ctx.path) {
+        return;
+    }
+    for s in 0..ctx.sig.len() {
+        let Some(Tok::Ident(id)) = ctx.kind(s) else { continue };
+        let line = ctx.line(s);
+        match id.as_str() {
+            "HashMap" | "HashSet" => ctx.push(
+                out,
+                RULE_DETERMINISM,
+                line,
+                format!(
+                    "{id} iteration order is nondeterministic and would break the bitwise \
+                     kernel / SA-resume guarantees — use BTreeMap/BTreeSet or index-keyed Vecs"
+                ),
+            ),
+            "SystemTime" => ctx.push(
+                out,
+                RULE_DETERMINISM,
+                line,
+                "SystemTime in a deterministic score path — derive decisions from \
+                 util::rng::Rng seeded by the caller, and time at the boundary with time_span!"
+                    .to_string(),
+            ),
+            "Instant" => {
+                if ctx.is_punct(s + 1, ':')
+                    && ctx.is_punct(s + 2, ':')
+                    && ctx.is_ident(s + 3, "now")
+                {
+                    ctx.push(
+                        out,
+                        RULE_DETERMINISM,
+                        line,
+                        "Instant::now in a deterministic score path — wall time must not feed \
+                         kernels or SA decisions; time at the boundary with time_span! and \
+                         randomize only through util::rng::Rng"
+                            .to_string(),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Run every rule over one file. `used` collects canon-name references
+/// for the corpus-level unused-entry check.
+pub fn lint_file_ctx(
+    ctx: &FileCtx,
+    allow_prefixes: &[String],
+    used: &mut BTreeSet<String>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    check_metrics_and_aliasing(ctx, allow_prefixes, used, &mut out);
+    check_safety_comments(ctx, &mut out);
+    check_panic_audit(ctx, &mut out);
+    check_determinism(ctx, &mut out);
+    out
+}
+
+/// Corpus finisher: every CANON entry must be referenced somewhere.
+/// `def_lines` (collected while scanning `util/metrics.rs`) lets the
+/// diagnostic point at the stale entry itself.
+pub fn check_unused_canon(
+    used: &BTreeSet<String>,
+    def_lines: &BTreeMap<String, u32>,
+    out: &mut Vec<Finding>,
+) {
+    for (name, _) in CANON {
+        if !used.contains(*name) {
+            out.push(Finding {
+                path: "rust/src/util/metrics.rs".to_string(),
+                line: def_lines.get(*name).copied().unwrap_or(0),
+                rule: RULE_METRIC_CANON,
+                msg: format!(
+                    "CANON entry {name:?} is referenced by no call site — remove it or wire \
+                     the metric up (the canon, the code, and the ROADMAP table must not drift)"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        let ctx = FileCtx::new(path, src);
+        let mut used = BTreeSet::new();
+        lint_file_ctx(&ctx, &[String::from("bench.")], &mut used)
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn canon_names_pass_and_bogus_names_fail() {
+        let ok = run("rust/src/x.rs", r#"fn f() { crate::counter!("serve.jobs_total").inc(); }"#);
+        assert!(ok.is_empty(), "{ok:?}");
+        let bad = run("rust/src/x.rs", r#"fn f() { crate::counter!("bogus.name").inc(); }"#);
+        assert_eq!(rules_of(&bad), vec![RULE_METRIC_CANON], "{bad:?}");
+        assert_eq!(bad[0].line, 1);
+    }
+
+    #[test]
+    fn kind_mismatch_and_shape_are_findings() {
+        let kind = run("rust/src/x.rs", r#"fn f() { crate::gauge!("serve.jobs_total").set(0.0); }"#);
+        assert_eq!(rules_of(&kind), vec![RULE_METRIC_CANON]);
+        let shape = run("rust/src/x.rs", r#"fn f() { crate::counter!("NoDotsHere").inc(); }"#);
+        assert_eq!(rules_of(&shape), vec![RULE_METRIC_CANON]);
+        let dur = run("rust/src/x.rs", r#"fn f() { crate::time_span!("bench.block", 1); }"#);
+        assert_eq!(rules_of(&dur), vec![RULE_METRIC_CANON], "{dur:?}");
+    }
+
+    #[test]
+    fn allow_prefix_and_dollar_args_are_exempt() {
+        assert!(run("rust/src/x.rs", r#"fn f() { crate::counter!("bench.anything").inc(); }"#)
+            .is_empty());
+        // `$name` in a macro_rules body must not trip the aliasing rule.
+        assert!(run(
+            "rust/src/x.rs",
+            "macro_rules! c { ($name:expr) => { registry().counter($name) }; }"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn dynamic_macro_name_is_aliasing() {
+        let f = run(
+            "rust/src/x.rs",
+            r#"fn f(i: usize) { for _ in 0..4 { crate::gauge!(&format!("serve.linger_us.{i}")).set(0.0); } }"#,
+        );
+        assert_eq!(rules_of(&f), vec![RULE_ALIASING], "{f:?}");
+    }
+
+    #[test]
+    fn registry_format_call_normalizes_to_instanced_canon() {
+        let ok = run(
+            "rust/src/x.rs",
+            r#"fn f(i: usize) { let c = registry().counter(&format!("serve.shard_jobs_total.{}", i)); c.inc(); }"#,
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        let bad = run(
+            "rust/src/x.rs",
+            r#"fn f(i: usize) { let c = registry().counter(&format!("serve.rogue_total.{}", i)); c.inc(); }"#,
+        );
+        assert_eq!(rules_of(&bad), vec![RULE_METRIC_CANON]);
+    }
+
+    #[test]
+    fn unsafe_needs_adjacent_safety_comment() {
+        let ok = "// SAFETY: disjoint writes via the cursor.\nunsafe { w(); }";
+        assert!(run("rust/src/x.rs", ok).is_empty());
+        let gap = "// SAFETY: too far away.\n\nlet x = 1;\nunsafe { w(); }";
+        assert_eq!(rules_of(&run("rust/src/x.rs", gap)), vec![RULE_SAFETY]);
+        let none = "unsafe impl Send for X {}";
+        assert_eq!(rules_of(&run("rust/src/x.rs", none)), vec![RULE_SAFETY]);
+    }
+
+    #[test]
+    fn panic_audit_scopes_by_path_and_test_span() {
+        let src = "fn f(v: &[u64]) -> u64 { v.first().copied().unwrap() }";
+        assert!(run("rust/src/other.rs", src).is_empty(), "only scoped files are panic-free zones");
+        let f = run("rust/src/coordinator/serve.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_PANIC]);
+        let tested = "#[cfg(test)]\nmod tests {\n fn g(v: &[u64]) -> u64 { v[0] }\n}";
+        assert!(run("rust/src/coordinator/serve.rs", tested).is_empty());
+    }
+
+    #[test]
+    fn indexing_flags_expressions_not_types() {
+        let ty = "struct H { b: [u64; 4] } fn f() -> Vec<[u8; 2]> { vec![[0; 2]] }";
+        assert!(run("rust/src/util/metrics.rs", ty).is_empty(), "{:?}", run("rust/src/util/metrics.rs", ty));
+        let idx = "fn f(v: &[u64]) -> u64 { v[0] }";
+        assert_eq!(rules_of(&run("rust/src/util/metrics.rs", idx)), vec![RULE_PANIC]);
+    }
+
+    #[test]
+    fn determinism_scopes_and_fires() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = std::time::Instant::now(); }";
+        assert!(run("rust/src/coordinator/serve.rs", src).is_empty());
+        let f = run("rust/src/kernels/spmm.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_DETERMINISM, RULE_DETERMINISM], "{f:?}");
+        assert_eq!((f[0].line, f[1].line), (1, 2));
+        let ok = "use crate::util::rng::Rng;\nfn f(r: &mut Rng) -> u64 { r.next_u64() }";
+        assert!(run("rust/src/search/anneal.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses_without_reason_does_not() {
+        let with = "// lint:allow(panic-audit) bucket_of clamps the index\nfn f(v: &[u64]) -> u64 { v[0] }";
+        assert!(run("rust/src/util/metrics.rs", with).is_empty());
+        let without = "// lint:allow(panic-audit)\nfn f(v: &[u64]) -> u64 { v[0] }";
+        assert_eq!(rules_of(&run("rust/src/util/metrics.rs", without)), vec![RULE_PANIC]);
+        let wrong_rule = "// lint:allow(determinism) misdirected\nfn f(v: &[u64]) -> u64 { v[0] }";
+        assert_eq!(rules_of(&run("rust/src/util/metrics.rs", wrong_rule)), vec![RULE_PANIC]);
+    }
+
+    #[test]
+    fn unused_canon_reports_stale_entries() {
+        let mut used: BTreeSet<String> =
+            CANON.iter().map(|(n, _)| n.to_string()).collect();
+        let mut out = Vec::new();
+        check_unused_canon(&used, &BTreeMap::new(), &mut out);
+        assert!(out.is_empty());
+        used.remove("sa.evals_total");
+        check_unused_canon(&used, &BTreeMap::new(), &mut out);
+        assert_eq!(rules_of(&out), vec![RULE_METRIC_CANON]);
+        assert!(out[0].msg.contains("sa.evals_total"));
+    }
+
+    #[test]
+    fn quoted_and_commented_violations_do_not_fire() {
+        let src = r##"
+// counter!("bogus.name") in a comment
+fn f() { let s = "counter!(\"also.bogus\")"; let r = r#"panic!("no")"#; g(s, r); }
+"##;
+        assert!(run("rust/src/coordinator/serve.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,349 @@
+//! Lossy-but-honest Rust tokenizer for `cognate-lint`.
+//!
+//! This is not a parser: it splits source text into just enough token
+//! classes for the rule passes — identifiers, string literals, single
+//! punctuation characters, numbers, and comments (retained, because the
+//! `safety-comment` rule and `lint:allow` suppressions live in them).
+//! The one hard requirement is that nothing inside a string, char
+//! literal, or comment ever leaks out as an identifier or punctuation
+//! token: a rule must never fire on `"counter!(…)"` quoted in a test
+//! fixture or a doc comment. Lifetimes (`'a`) are deliberately lexed as
+//! a bare identifier (the quote is dropped); no rule keys on them.
+
+/// Token classes. `Str` carries the literal's raw content (escapes are
+/// not resolved — metric names and the patterns the rules match are
+/// plain ASCII without escapes).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// String literal content (cooked, raw, or byte form), quotes and
+    /// hashes stripped.
+    Str(String),
+    /// Numeric literal (value unused by any rule).
+    Num,
+    /// Single punctuation character.
+    Punct(char),
+    /// `//…` or `/*…*/` comment, full text including the delimiters.
+    Comment(String),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub kind: Tok,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs consume to EOF.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            toks.push(Token {
+                kind: Tok::Comment(String::from_utf8_lossy(&b[start..i]).into_owned()),
+                line,
+            });
+        } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Token {
+                kind: Tok::Comment(String::from_utf8_lossy(&b[start..i]).into_owned()),
+                line: start_line,
+            });
+        } else if c == b'"' {
+            let (s, ni, nl) = cooked_string(b, i + 1, line);
+            toks.push(Token { kind: Tok::Str(s), line });
+            i = ni;
+            line = nl;
+        } else if let Some((prefix_len, hashes)) = raw_string_prefix(b, i) {
+            let start_line = line;
+            let (s, ni, nl) = raw_string(b, i + prefix_len, hashes, line);
+            toks.push(Token { kind: Tok::Str(s), line: start_line });
+            i = ni;
+            line = nl;
+        } else if c == b'b' && b.get(i + 1) == Some(&b'"') {
+            let (s, ni, nl) = cooked_string(b, i + 2, line);
+            toks.push(Token { kind: Tok::Str(s), line });
+            i = ni;
+            line = nl;
+        } else if c == b'\'' {
+            i = char_or_lifetime(b, i, &mut toks, line);
+        } else if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(b[i]) {
+                i += 1;
+            }
+            toks.push(Token {
+                kind: Tok::Ident(String::from_utf8_lossy(&b[start..i]).into_owned()),
+                line,
+            });
+        } else if c.is_ascii_digit() {
+            // Numbers: digits, alnum suffixes/exponents, `_`, and `.`
+            // only when a digit follows (so `0..n` stays three tokens).
+            i += 1;
+            while i < n {
+                if is_ident_continue(b[i]) {
+                    i += 1;
+                } else if b[i] == b'.'
+                    && b.get(i + 1).is_some_and(|d| d.is_ascii_digit())
+                {
+                    i += 2;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Token { kind: Tok::Num, line });
+        } else if c.is_ascii() {
+            toks.push(Token { kind: Tok::Punct(c as char), line });
+            i += 1;
+        } else {
+            // Stray non-ASCII outside strings/comments: skip the code
+            // point without splitting it.
+            let ch = src[i..].chars().next().unwrap_or('\u{FFFD}');
+            i += ch.len_utf8();
+        }
+    }
+    toks
+}
+
+/// Cooked string body starting just past the opening quote. Returns
+/// (content, index-past-closing-quote, line-after).
+fn cooked_string(b: &[u8], mut i: usize, mut line: u32) -> (String, usize, u32) {
+    let start = i;
+    while i < b.len() {
+        match b[i] {
+            b'"' => {
+                let s = String::from_utf8_lossy(&b[start..i]).into_owned();
+                return (s, i + 1, line);
+            }
+            b'\\' => i += 2,
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (String::from_utf8_lossy(&b[start..]).into_owned(), b.len(), line)
+}
+
+/// If `b[i..]` opens a raw (or raw-byte) string, returns
+/// (prefix length up to and including the opening quote, hash count).
+fn raw_string_prefix(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Raw string body starting just past the opening quote; terminates at
+/// `"` followed by `hashes` `#`s.
+fn raw_string(b: &[u8], mut i: usize, hashes: usize, mut line: u32) -> (String, usize, u32) {
+    let start = i;
+    while i < b.len() {
+        if b[i] == b'\n' {
+            line += 1;
+            i += 1;
+        } else if b[i] == b'"' && b[i + 1..].iter().take(hashes).filter(|&&h| h == b'#').count() == hashes
+        {
+            let s = String::from_utf8_lossy(&b[start..i]).into_owned();
+            return (s, i + 1 + hashes, line);
+        } else {
+            i += 1;
+        }
+    }
+    (String::from_utf8_lossy(&b[start..]).into_owned(), b.len(), line)
+}
+
+/// Disambiguate `'x'` / `'\n'` / `'💡'` (char literals, consumed whole)
+/// from `'a` lifetimes (quote dropped; the name lexes as an identifier).
+/// Returns the index to continue from.
+fn char_or_lifetime(b: &[u8], i: usize, toks: &mut Vec<Token>, line: u32) -> usize {
+    let n = b.len();
+    match b.get(i + 1) {
+        None => i + 1,
+        Some(&b'\\') => {
+            // Escaped char literal: skip the escape, scan to the quote.
+            let mut j = i + 3;
+            while j < n && b[j] != b'\'' {
+                j += 1;
+            }
+            toks.push(Token { kind: Tok::Str(String::new()), line });
+            (j + 1).min(n)
+        }
+        Some(&next) => {
+            // One UTF-8 code point then a closing quote ⇒ char literal.
+            let cp_len = if next < 0x80 {
+                1
+            } else if next >= 0xF0 {
+                4
+            } else if next >= 0xE0 {
+                3
+            } else {
+                2
+            };
+            if b.get(i + 1 + cp_len) == Some(&b'\'') {
+                toks.push(Token { kind: Tok::Str(String::new()), line });
+                i + 2 + cp_len
+            } else {
+                // Lifetime: drop the quote, let the name lex normally.
+                i + 1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn strs(src: &str) -> Vec<String> {
+        tokenize(src)
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                Tok::Str(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_lines() {
+        let toks = tokenize("fn f() {\n  x.y\n}");
+        assert_eq!(toks[0], Token { kind: Tok::Ident("fn".into()), line: 1 });
+        let dot = toks.iter().find(|t| t.kind == Tok::Punct('.')).unwrap();
+        assert_eq!(dot.line, 2);
+        assert_eq!(idents("fn f() { x.y }"), vec!["fn", "f", "x", "y"]);
+    }
+
+    #[test]
+    fn strings_do_not_leak_tokens() {
+        // The quoted macro call must come out as ONE Str token.
+        let src = r##"let s = "counter!(\"x.y\")"; g(s);"##;
+        let toks = tokenize(src);
+        assert!(toks.iter().all(|t| t.kind != Tok::Punct('!')));
+        assert_eq!(idents(src), vec!["let", "s", "g", "s"]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        assert_eq!(strs(r###"x(r#"a "quoted" b"#)"###), vec![r#"a "quoted" b"#]);
+        assert_eq!(strs(r#"y(b"bytes")"#), vec!["bytes"]);
+        assert_eq!(strs("z(r\"plain\")"), vec!["plain"]);
+    }
+
+    #[test]
+    fn comments_are_captured_not_parsed() {
+        let src = "// SAFETY: fine\nunsafe { f() } /* counter!(\"a.b\") */";
+        let toks = tokenize(src);
+        let comments: Vec<&str> = toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                Tok::Comment(c) => Some(c.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].contains("SAFETY:"));
+        // Macro-call text inside the block comment emits no idents.
+        assert_eq!(idents(src), vec!["unsafe", "f"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = tokenize("/* a /* b */ c */ fn");
+        assert_eq!(toks.len(), 2);
+        assert!(matches!(toks[0].kind, Tok::Comment(_)));
+        assert_eq!(toks[1].kind, Tok::Ident("fn".into()));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        // Char literals vanish into empty Str tokens; lifetimes lex as
+        // a bare ident with the quote dropped.
+        assert_eq!(idents("x<'a> = 'b'; s.push('\\n'); t('💡')"), vec!["x", "a", "s", "push", "t"]);
+        // Tuple of char literals: the comma must survive.
+        let toks = tokenize("('a', 'b')");
+        assert_eq!(toks.iter().filter(|t| t.kind == Tok::Punct(',')).count(), 1);
+    }
+
+    #[test]
+    fn numbers_are_single_tokens() {
+        let toks = tokenize("1.5e-3 0x9E37 1_000 0..n");
+        let nums = toks.iter().filter(|t| t.kind == Tok::Num).count();
+        assert_eq!(nums, 4);
+        // `..` survives as two puncts.
+        assert_eq!(toks.iter().filter(|t| t.kind == Tok::Punct('.')).count(), 2);
+    }
+
+    #[test]
+    fn unterminated_inputs_do_not_loop() {
+        tokenize("\"unterminated");
+        tokenize("/* unterminated");
+        tokenize("r#\"unterminated");
+        tokenize("'");
+    }
+}

@@ -34,12 +34,74 @@
 //! through `registry().counter(&format!(...))` once at thread start
 //! and hold the returned `&'static` handle — same lock-free hot path,
 //! one registration per instance instead of per call site.
+//!
+//! Naming is governed by [`CANON`]: the full production name table,
+//! statically enforced by `cognate-lint` (`cargo run --bin
+//! cognate_lint`) against every call site and the ROADMAP.md table.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+// ---- canonical names ------------------------------------------------------
+
+/// Metric kinds, as declared in [`CANON`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// The canonical metric-name table: every production metric the crate
+/// emits, in `layer.metric` form, with duration histograms ending
+/// `_us`. Instanced (per-shard) names carry a literal `<i>` segment.
+///
+/// This table is load-bearing: the `cognate-lint` metric-canon rule
+/// checks every `counter!`/`gauge!`/`histogram!`/`time_span!` literal
+/// and `registry().counter(&format!(…))` template against it, flags
+/// entries no call site references, and cross-checks the ROADMAP.md
+/// metric table both ways. Adding a metric means updating all three in
+/// the same PR — `cargo test -q` (via `tests/lint.rs`) fails otherwise.
+pub const CANON: &[(&str, Kind)] = &[
+    ("serve.jobs_total", Kind::Counter),
+    ("serve.errors_total", Kind::Counter),
+    ("serve.connections_total", Kind::Counter),
+    ("serve.stats_requests_total", Kind::Counter),
+    ("serve.queue_wait_us", Kind::Histogram),
+    ("serve.batch_size", Kind::Histogram),
+    ("serve.featurize_us", Kind::Histogram),
+    ("serve.score_us", Kind::Histogram),
+    ("serve.linger_us", Kind::Gauge),
+    ("serve.shard_linger_us.<i>", Kind::Gauge),
+    ("serve.shard_jobs_total.<i>", Kind::Counter),
+    ("serve.router_depth", Kind::Histogram),
+    ("serve.router_overflow_total", Kind::Counter),
+    ("train.steps_total", Kind::Counter),
+    ("train.step_us", Kind::Histogram),
+    ("train.pair_sample_us", Kind::Histogram),
+    ("train.loss", Kind::Gauge),
+    ("train.val_prl", Kind::Gauge),
+    ("train.val_opa", Kind::Gauge),
+    ("train.val_ktau", Kind::Gauge),
+    ("sa.evals_total", Kind::Counter),
+    ("sa.accept_rate", Kind::Gauge),
+    ("sa.best_score", Kind::Gauge),
+    ("sa.chain_us", Kind::Histogram),
+    ("kernels.partition_imbalance", Kind::Gauge),
+    ("pool.tasks_total", Kind::Counter),
+    ("pool.task_wait_us", Kind::Histogram),
+    ("dataset.matrix_eval_us", Kind::Histogram),
+    ("dataset.lpt_skew", Kind::Gauge),
+];
+
+/// Exact-match lookup into [`CANON`] (instanced names match only their
+/// `<i>` template form — callers normalize `format!` templates first).
+pub fn canon_kind(name: &str) -> Option<Kind> {
+    CANON.iter().find(|(n, _)| *n == name).map(|&(_, k)| k)
+}
 
 // ---- metric cells ---------------------------------------------------------
 
@@ -132,6 +194,7 @@ impl Histogram {
 
     #[inline]
     pub fn observe(&self, v: u64) {
+        // lint:allow(panic-audit) bucket_of clamps to HIST_BUCKETS - 1
         self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
@@ -149,6 +212,16 @@ impl Histogram {
     }
     pub fn sum(&self) -> u64 {
         self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket counts (Relaxed loads; best-effort consistent with
+    /// `count()` under concurrent observes, exact at quiescence).
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        let mut out = [0u64; HIST_BUCKETS];
+        for (slot, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *slot = b.load(Ordering::Relaxed);
+        }
+        out
     }
     pub fn mean(&self) -> f64 {
         let c = self.count();
@@ -245,35 +318,45 @@ impl Registry {
         Registry { metrics: Mutex::new(BTreeMap::new()) }
     }
 
+    /// Poison-proof lock: a holder that panicked can only have been
+    /// mid-registration or mid-snapshot, and the map stays structurally
+    /// sound either way — telemetry must never compound a panic.
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        self.metrics.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     pub fn counter(&self, name: &str) -> &'static Counter {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = self.lock();
         let e = m
             .entry(name.to_string())
             .or_insert_with(|| Metric::Counter(Box::leak(Box::new(Counter::new()))));
         match *e {
             Metric::Counter(c) => c,
+            // lint:allow(panic-audit) kind clash is a compile-time-shape bug, not input
             _ => panic!("metric {name:?} already registered with a different type"),
         }
     }
 
     pub fn gauge(&self, name: &str) -> &'static Gauge {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = self.lock();
         let e = m
             .entry(name.to_string())
             .or_insert_with(|| Metric::Gauge(Box::leak(Box::new(Gauge::new()))));
         match *e {
             Metric::Gauge(g) => g,
+            // lint:allow(panic-audit) kind clash is a compile-time-shape bug, not input
             _ => panic!("metric {name:?} already registered with a different type"),
         }
     }
 
     pub fn histogram(&self, name: &str) -> &'static Histogram {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = self.lock();
         let e = m
             .entry(name.to_string())
             .or_insert_with(|| Metric::Histogram(Box::leak(Box::new(Histogram::new()))));
         match *e {
             Metric::Histogram(h) => h,
+            // lint:allow(panic-audit) kind clash is a compile-time-shape bug, not input
             _ => panic!("metric {name:?} already registered with a different type"),
         }
     }
@@ -281,7 +364,7 @@ impl Registry {
     /// Full snapshot as sorted JSON:
     /// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
     pub fn snapshot(&self) -> Json {
-        let m = self.metrics.lock().unwrap();
+        let m = self.lock();
         let mut counters = BTreeMap::new();
         let mut gauges = BTreeMap::new();
         let mut hists = BTreeMap::new();
@@ -308,7 +391,7 @@ impl Registry {
     /// Zero every registered metric (tests / between-run hygiene).
     /// Handles stay valid — cells are reset, not replaced.
     pub fn reset_all(&self) {
-        let m = self.metrics.lock().unwrap();
+        let m = self.lock();
         for v in m.values() {
             match *v {
                 Metric::Counter(c) => c.reset(),
@@ -525,5 +608,43 @@ mod tests {
         let r = Registry::new();
         r.counter("t.x");
         r.gauge("t.x");
+    }
+
+    #[test]
+    fn canon_names_are_unique_shaped_and_us_suffixed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, kind) in CANON {
+            assert!(seen.insert(*name), "duplicate CANON entry {name}");
+            assert!(
+                name.split('.').count() >= 2
+                    && name.split('.').all(|s| {
+                        s == "<i>"
+                            || (!s.is_empty()
+                                && s.chars().all(|c| {
+                                    c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'
+                                }))
+                    }),
+                "CANON entry {name} is not layer.metric shaped"
+            );
+            // `_us` names are histograms or gauges of microsecond
+            // quantities (e.g. the linger window) — never counters.
+            if name.ends_with("_us") {
+                assert_ne!(*kind, Kind::Counter, "{name}: counters do not carry units");
+            }
+            assert_eq!(canon_kind(name), Some(*kind));
+        }
+        assert_eq!(canon_kind("serve.jobs_total"), Some(Kind::Counter));
+        assert_eq!(canon_kind("no.such.metric"), None);
+    }
+
+    #[test]
+    fn bucket_counts_sum_to_count() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 7, 1000, u64::MAX] {
+            h.observe(v);
+        }
+        let counts = h.bucket_counts();
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(counts[0], 1, "zero lands in bucket 0");
     }
 }

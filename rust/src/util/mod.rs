@@ -1,10 +1,11 @@
 //! Self-contained substrates: PRNG, JSON, statistics, thread pool,
-//! tables/CSV, logging, telemetry metrics, and a bench harness. The
-//! offline build has only `xla` + `anyhow` as external crates, so
-//! everything else lives here.
+//! tables/CSV, logging, telemetry metrics, a bench harness, and the
+//! `cognate-lint` static analysis pass. The offline build has only
+//! `xla` + `anyhow` as external crates, so everything else lives here.
 
 pub mod bench;
 pub mod json;
+pub mod lint;
 pub mod logger;
 pub mod metrics;
 pub mod pool;

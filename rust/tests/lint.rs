@@ -1,0 +1,44 @@
+//! `cargo test -q` gate for `cognate-lint`: the repo must scan clean.
+//!
+//! This is the same walk `cargo run --bin cognate_lint` and the
+//! `== lint ==` stage of scripts/verify.sh perform — seeding any rule
+//! violation (dropping a `// SAFETY:`, adding `counter!("bogus.name")`,
+//! a `format!`-named `gauge!` in a loop, …) turns this test red with
+//! the exact `file:line: rule: message` diagnostic the CLI would print.
+
+use cognate::util::lint::{find_repo_root, lint_repo};
+use std::path::Path;
+
+#[test]
+fn repo_scans_clean_under_cognate_lint() {
+    let root = find_repo_root(Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("repo root (rust/src + ROADMAP.md) above CARGO_MANIFEST_DIR");
+    let report = lint_repo(&root).expect("lint walk must read every source file");
+    // The walk must actually cover the corpus — a path regression that
+    // silently scanned nothing would otherwise look like a clean repo.
+    assert!(
+        report.files_scanned >= 60,
+        "suspiciously few files scanned ({}) — did the scan roots move?",
+        report.files_scanned
+    );
+    assert!(
+        report.findings.is_empty(),
+        "cognate-lint findings at HEAD:\n{}\n({} findings, {} files scanned)",
+        report.render(),
+        report.findings.len(),
+        report.files_scanned
+    );
+}
+
+#[test]
+fn lint_json_summary_is_machine_readable() {
+    let root = find_repo_root(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("repo root");
+    let report = lint_repo(&root).expect("lint walk");
+    let json = report.to_json().to_string();
+    let back = cognate::util::json::Json::parse(&json).expect("summary must parse");
+    assert_eq!(back.req("ok").as_bool(), Some(report.findings.is_empty()));
+    assert_eq!(
+        back.req("files_scanned").as_f64(),
+        Some(report.files_scanned as f64)
+    );
+}

@@ -229,3 +229,68 @@ fn prop_density_map_bounded_and_deterministic() {
         assert!(d1.iter().all(|&v| (0.0..=1.001).contains(&v)));
     }
 }
+
+#[test]
+fn prop_metrics_snapshot_parseable_sorted_and_bucket_consistent() {
+    use cognate::util::metrics::{canon_kind, Kind, Registry, CANON};
+    let mut rng = Rng::new(111);
+    for _round in 0..25 {
+        // Fresh private registry per round; metrics drawn from CANON
+        // (instanced `<i>` templates made concrete), random values.
+        let r = Registry::new();
+        let mut hist_names = Vec::new();
+        for _ in 0..1 + rng.next_usize(CANON.len()) {
+            let (tmpl, _) = *rng.choose(CANON);
+            let name = tmpl.replace("<i>", &rng.next_usize(8).to_string());
+            // Duplicate draws re-register the same kind — idempotent.
+            match canon_kind(tmpl) {
+                Some(Kind::Counter) => r.counter(&name).add(rng.next_u64() >> 40),
+                Some(Kind::Gauge) => r.gauge(&name).set(rng.range_f64(-1e6, 1e6)),
+                Some(Kind::Histogram) => {
+                    let h = r.histogram(&name);
+                    for _ in 0..rng.next_usize(200) {
+                        h.observe(rng.next_u64() >> (rng.next_usize(63) as u32));
+                    }
+                    hist_names.push(name);
+                }
+                None => unreachable!("CANON entry must resolve"),
+            }
+        }
+        // Snapshot is parseable JSON and a fixed point of parse∘print
+        // (util::json prints BTreeMap objects, so keys are sorted).
+        let s = r.snapshot().to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("snapshot {s:?}: {e}"));
+        assert_eq!(back.to_string(), s, "snapshot must round-trip byte-identically");
+        // Sorted keys, verified against the raw string: each section's
+        // quoted keys appear in strictly increasing byte offsets.
+        for section in ["counters", "gauges", "histograms"] {
+            if let Some(Json::Obj(map)) = back.get(section) {
+                let mut last = 0usize;
+                for key in map.keys() {
+                    let needle = format!("\"{key}\"");
+                    let at = s[last..].find(&needle).map(|i| last + i).unwrap_or_else(|| {
+                        panic!("{section} key {key} out of order in {s}")
+                    });
+                    last = at + needle.len();
+                }
+            }
+        }
+        // Histogram invariant: count == sum of bucket counts, and the
+        // snapshot's count field agrees with the handle.
+        for name in &hist_names {
+            let h = r.histogram(name);
+            assert_eq!(
+                h.bucket_counts().iter().sum::<u64>(),
+                h.count(),
+                "{name}: bucket counts must sum to count"
+            );
+            let snap_count = back
+                .get("histograms")
+                .and_then(|hs| hs.get(name))
+                .and_then(|o| o.get("count"))
+                .and_then(|c| c.as_f64())
+                .unwrap_or_else(|| panic!("{name} missing from snapshot {s}"));
+            assert_eq!(snap_count as u64, h.count());
+        }
+    }
+}

@@ -35,6 +35,39 @@ cargo test -q --manifest-path "$manifest"
 echo "== clippy =="
 cargo clippy --all-targets --manifest-path "$manifest" -- -D warnings
 
+echo "== lint (cognate_lint static analysis) =="
+# Dependency-free scanner enforcing the metric canon, macro-aliasing,
+# SAFETY-comment, panic-audit, and determinism rules (ROADMAP.md
+# "Static analysis"). Exits 1 with file:line: rule: diagnostics on any
+# finding. Falls back to the tests/lint.rs gate if bin discovery ever
+# differs across manifest layouts.
+if cargo run --release --manifest-path "$manifest" --bin cognate_lint -- --help \
+    >/dev/null 2>&1; then
+    COGNATE_LINT_ROOT="$(pwd)" \
+        cargo run --release --manifest-path "$manifest" --bin cognate_lint -- \
+        --json "$(pwd)/LINT_report.json"
+else
+    echo "verify.sh: cognate_lint bin not discoverable — falling back to tests/lint.rs" >&2
+    cargo test -q --manifest-path "$manifest" --test lint
+fi
+
+echo "== thread sanitizer smoke (optional) =="
+# TSan needs nightly + rust-src on x86_64 Linux; degrade with a clear
+# message instead of cascading when any piece is missing.
+if command -v rustup >/dev/null 2>&1 \
+    && rustup toolchain list 2>/dev/null | grep -q nightly \
+    && rustup component list --toolchain nightly 2>/dev/null \
+        | grep -q 'rust-src (installed)' \
+    && [ "$(uname -sm)" = "Linux x86_64" ]; then
+    RUSTFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test --manifest-path "$manifest" -Zbuild-std \
+        --target x86_64-unknown-linux-gnu --test integration_serve \
+        -- --test-threads=1
+else
+    echo "verify.sh: nightly toolchain with rust-src not available on x86_64 Linux —" >&2
+    echo "           skipping ThreadSanitizer smoke of tests/integration_serve.rs" >&2
+fi
+
 echo "== kernel A/B bench → BENCH_kernels.json =="
 BENCH_OUT="$(pwd)/BENCH_kernels.json" \
     cargo bench --bench bench_perf_ab --manifest-path "$manifest"
