@@ -12,6 +12,13 @@
 //! the process-global telemetry snapshot as JSON after the run — the
 //! server runs in-process, so the snapshot covers train + serve. The
 //! verify.sh smoke step uses this to assert `serve.jobs_total` > 0.
+//!
+//! With `--trace-out PATH` (or `COGNATE_TRACE_OUT=PATH`), drains the
+//! span rings into Chrome trace_event JSON after the run — load it in
+//! Perfetto or chrome://tracing to see every request's
+//! accept → queue → linger → featurize → score → reply tree, tagged
+//! with shard and batch ids. The demo samples every request
+//! (`COGNATE_TRACE_SAMPLE` overrides).
 
 use cognate::config::PlatformId;
 use cognate::coordinator::{serve, Pipeline, Scale};
@@ -22,6 +29,9 @@ use cognate::train::{train, TrainOpts};
 use anyhow::Result;
 
 fn main() -> Result<()> {
+    // Trace every request unless COGNATE_TRACE_SAMPLE says otherwise —
+    // a demo run is exactly when you want the full span tree.
+    cognate::util::trace::init_from_env(1.0);
     let mut scale = Scale::small();
     scale.pretrain_opts = TrainOpts { epochs: 3, batches_per_epoch: 16, val_matrices: 0, ..TrainOpts::default() };
     scale.ae_steps = 100;
@@ -98,6 +108,17 @@ fn main() -> Result<()> {
         let snap = cognate::util::metrics::registry().snapshot();
         std::fs::write(&path, format!("{}\n", snap.to_string()))?;
         println!("wrote metrics snapshot: {path}");
+    }
+
+    // Chrome-trace export: --trace-out PATH beats COGNATE_TRACE_OUT.
+    let trace_out = argv
+        .iter()
+        .position(|a| a == "--trace-out")
+        .and_then(|i| argv.get(i + 1).cloned())
+        .or_else(|| std::env::var("COGNATE_TRACE_OUT").ok());
+    if let Some(path) = trace_out {
+        let n = cognate::util::trace::write_chrome_trace(&path)?;
+        println!("wrote chrome trace ({n} spans): {path}");
     }
     Ok(())
 }

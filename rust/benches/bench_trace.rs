@@ -1,0 +1,107 @@
+//! Tracing hot-path micro-bench and regression gate.
+//!
+//! The tracing substrate promises that an *unsampled* span is near
+//! free: `trace_span!` on the miss path is one thread-local context
+//! read, one relaxed atomic load, and a branch. This bench measures
+//! that miss path and *fails* (non-zero exit) if it exceeds
+//! [`GATE_NS`] — so tracing can stay always-on in serve without a
+//! perf debate. The sampled path (ring write) and `record` backfill
+//! are reported alongside for context, ungated.
+//!
+//! Results land in `BENCH_trace.json` at the repo root (override with
+//! `BENCH_OUT`). No artifacts required.
+
+use cognate::util::bench::{bench, black_box};
+use cognate::util::json::Json;
+use cognate::util::trace::{self, TraceCtx};
+
+/// Gate: a sample-miss `trace_span!` must stay below this per op.
+const GATE_NS: f64 = 20.0;
+
+/// Inner-loop size: large enough to amortize the harness's `Instant`
+/// reads down to noise, small enough to keep iterations snappy.
+const OPS: usize = 10_000;
+
+fn repo_root() -> std::path::PathBuf {
+    let start = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut d = start.clone();
+    loop {
+        if d.join("CHANGES.md").exists() || d.join(".git").exists() {
+            return d;
+        }
+        if !d.pop() {
+            return start;
+        }
+    }
+}
+
+fn ns_per_op(min_s: f64) -> f64 {
+    min_s * 1e9 / OPS as f64
+}
+
+fn main() {
+    let mut results: Vec<(&str, f64)> = Vec::new();
+
+    // 1. Disabled (sample = 0): the always-on cost every untraced
+    //    request pays. This is the gated number.
+    trace::set_sample(0.0);
+    let r = bench("trace_span! sample miss (p=0)", 5, 200, 2.0, || {
+        for i in 0..OPS {
+            black_box(cognate::trace_span!("pool.task", i + 1));
+        }
+    });
+    r.report();
+    let miss_ns = ns_per_op(r.min_s);
+    results.push(("span_miss_ns", miss_ns));
+
+    // 2. Fractional sampling: adds one thread-local SplitMix64 step on
+    //    the miss path (and a ring write on the ~0.1% of hits).
+    trace::set_sample(0.001);
+    let r = bench("trace_span! sample miss (p=0.001)", 5, 200, 2.0, || {
+        for i in 0..OPS {
+            black_box(cognate::trace_span!("pool.task", i + 1));
+        }
+    });
+    r.report();
+    results.push(("span_miss_fractional_ns", ns_per_op(r.min_s)));
+
+    // 3. Fully sampled: two clock reads plus the seqlock ring write
+    //    (the rings overwrite-oldest, so lapping them here is fine).
+    trace::set_sample(1.0);
+    let r = bench("trace_span! sampled (p=1)", 5, 100, 2.0, || {
+        for i in 0..OPS {
+            black_box(cognate::trace_span!("pool.task", i + 1));
+        }
+    });
+    r.report();
+    results.push(("span_sampled_ns", ns_per_op(r.min_s)));
+
+    // 4. record() backfill: one id draw plus the ring write, no clock.
+    let ctx = TraceCtx { trace_id: 0xBE7C, span: 1 };
+    let r = bench("trace::record backfill", 5, 100, 2.0, || {
+        for i in 0..OPS {
+            black_box(trace::record("serve.queue", ctx, i as u64, 1, &[("shard", 0)]));
+        }
+    });
+    r.report();
+    results.push(("record_ns", ns_per_op(r.min_s)));
+    trace::set_sample(0.0);
+    drop(trace::drain()); // leave the rings empty for whoever runs next
+
+    let mut obj: Vec<(&str, Json)> = results.iter().map(|&(k, v)| (k, Json::Num(v))).collect();
+    obj.push(("span_miss_gate_ns", Json::Num(GATE_NS)));
+    let out = std::env::var("BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| repo_root().join("BENCH_trace.json"));
+    std::fs::write(&out, format!("{}\n", Json::obj(obj).to_string())).expect("write bench json");
+    println!("wrote {}", out.display());
+
+    if miss_ns > GATE_NS {
+        eprintln!(
+            "FAIL: sample-miss trace_span! costs {miss_ns:.1}ns/op, exceeding the {GATE_NS:.0}ns \
+             gate (did the miss path grow a clock read or a ring write?)"
+        );
+        std::process::exit(1);
+    }
+    println!("PASS: sample-miss trace_span! {miss_ns:.1}ns/op (< {GATE_NS:.0}ns gate)");
+}

@@ -25,9 +25,10 @@ OPTIONS:
 
 RULES:
     metric-canon, macro-instanced-aliasing, safety-comment, panic-audit,
-    determinism — documented in ROADMAP.md §Static analysis. Suppress a
-    single finding with `// lint:allow(<rule>) reason`; configure
-    allowlists in lint.toml at the repo root.
+    determinism, trace-canon — documented in ROADMAP.md §Static
+    analysis. Suppress a single finding with
+    `// lint:allow(<rule>) reason`; configure allowlists in lint.toml
+    at the repo root.
 
 EXIT CODES:
     0  no findings      1  findings reported      2  usage or IO error

@@ -8,11 +8,15 @@
 //!   cognate serve      [--addr A] [--max-jobs N] [--shards S] [--linger-max MS]
 //!                                                run the sharded auto-tuning service
 //!   cognate stats      [--addr A]                 scrape a running service's metrics
+//!   cognate trace      [--addr A]                 fetch a running service's span trace
 //!   cognate bench-sim                              quick simulator throughput check
 //!
 //! Every command accepts `--metrics-out PATH` to dump the telemetry
 //! snapshot at exit (written as `METRICS_<cmd>.json` when PATH is a
-//! directory).
+//! directory) and `--trace-out PATH` to drain the span rings into
+//! Chrome-trace JSON at exit (`TRACE_<cmd>.json` when PATH is a
+//! directory). Span sampling defaults to 1.0 for CLI runs and 0.01
+//! for `serve`; `COGNATE_TRACE_SAMPLE` overrides both.
 
 use crate::config::PlatformId;
 use crate::coordinator::{experiments, Pipeline, Scale};
@@ -123,12 +127,18 @@ COMMANDS
                                                adaptive batch-coalescing window)
   stats       [--addr 127.0.0.1:7199]          fetch a live telemetry snapshot from a
                                                running service ({\"stats\": true} request)
+  trace       [--addr 127.0.0.1:7199]          fetch a live Chrome-trace span dump from a
+                                               running service ({\"trace\": true} request)
   help                                         this text
 
 GLOBAL FLAGS
   --metrics-out PATH    write the telemetry snapshot (counters / gauges /
                         histograms, sorted JSON) when the command exits;
                         if PATH is a directory, writes METRICS_<cmd>.json
+  --trace-out PATH      drain the span rings into Chrome trace_event JSON
+                        (Perfetto / chrome://tracing loadable) when the
+                        command exits; if PATH is a directory, writes
+                        TRACE_<cmd>.json
   --results-dir DIR     root for the dataset cache, training telemetry
                         (metrics_epochs.jsonl) and default outputs
                         (default: results/)
@@ -141,18 +151,29 @@ ENVIRONMENT
   COGNATE_ARTIFACTS     override the ./artifacts directory
   COGNATE_SHARDS        default for serve --shards
   COGNATE_LINGER_MAX    default for serve --linger-max (milliseconds)
+  COGNATE_TRACE_SAMPLE  root-span sample probability in [0,1];
+                        default 0.01 for serve, 1.0 for other commands
 
 Artifacts must exist (run `make artifacts`); set COGNATE_ARTIFACTS to
 override the ./artifacts directory.";
 
 pub fn main_inner(argv: &[String]) -> Result<()> {
     let args = parse(argv)?;
+    // Span sampling: a CLI run is one deliberate invocation, so trace
+    // everything by default; serve handles a request stream, so sample
+    // 1% unless COGNATE_TRACE_SAMPLE says otherwise.
+    crate::util::trace::init_from_env(if args.cmd == "serve" { 0.01 } else { 1.0 });
     let result = dispatch(&args);
     // Snapshot even when the command failed — partial telemetry is
     // often the most useful artifact of a failed run.
     if args.flags.contains_key("metrics-out") {
         if let Err(e) = write_metrics_out(&args) {
             crate::warn!("metrics-out: {e:#}");
+        }
+    }
+    if args.flags.contains_key("trace-out") {
+        if let Err(e) = write_trace_out(&args) {
+            crate::warn!("trace-out: {e:#}");
         }
     }
     result
@@ -181,6 +202,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "search" => cmd_search(args),
         "serve" => cmd_serve(args),
         "stats" => cmd_stats(args),
+        "trace" => cmd_trace(args),
         other => bail!("unknown command {other:?} — see `cognate help`"),
     }
 }
@@ -214,12 +236,40 @@ fn write_metrics_out(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve `--trace-out` and drain the span rings there as
+/// Chrome-trace JSON.
+fn write_trace_out(args: &Args) -> Result<()> {
+    let raw = args.flag("trace-out", "");
+    anyhow::ensure!(!raw.is_empty() && raw != "true", "--trace-out needs a PATH");
+    let mut path = std::path::PathBuf::from(&raw);
+    if path.is_dir() {
+        path = path.join(format!("TRACE_{}.json", args.cmd));
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let n = crate::util::trace::write_chrome_trace(&path.to_string_lossy())?;
+    println!("wrote chrome trace ({n} spans): {}", path.display());
+    Ok(())
+}
+
 fn cmd_stats(args: &Args) -> Result<()> {
     let addr = args.flag("addr", "127.0.0.1:7199");
     let sock: std::net::SocketAddr =
         addr.parse().with_context(|| format!("bad --addr {addr:?}"))?;
     let snap = crate::coordinator::serve::request_stats(sock)?;
     println!("{}", snap.to_string());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let addr = args.flag("addr", "127.0.0.1:7199");
+    let sock: std::net::SocketAddr =
+        addr.parse().with_context(|| format!("bad --addr {addr:?}"))?;
+    let trace = crate::coordinator::serve::request_trace(sock)?;
+    println!("{}", trace.to_string_pretty());
     Ok(())
 }
 

@@ -23,14 +23,27 @@
 //!
 //! Protocol: one JSON object per line.
 //!   request:  {"id": 1, "k": 5, "rows": R, "cols": C,
-//!              "coo": [[r, c, v], ...]}
+//!              "coo": [[r, c, v], ...], "trace_id": "00ab..."(opt)}
 //!   response: {"id": 1, "top": [cfg_idx, ...], "scores": [...],
 //!              "latency_ms": ..., "batched_with": n, "shard": s,
 //!              "stages": {"queue_wait_ms": ..., "featurize_ms": ...,
-//!                         "score_ms": ...}}
+//!                         "score_ms": ...}, "trace_id": "00ab..."(opt)}
 //!   control:  {"stats": true} → a full `util::metrics` snapshot
 //!             (answered by the connection handler, never queued), so
 //!             operators can scrape the live service.
+//!             {"trace": true} → drain the `util::trace` rings as
+//!             Chrome trace_event JSON (one line; Perfetto-loadable).
+//!
+//! Tracing (`util::trace`, ROADMAP.md "Tracing"): each request line
+//! can become a span tree `serve.accept → parse → route → queue →
+//! linger → featurize → score → reply`, tagged with shard and batch
+//! ids. A request is traced when the client supplied a `"trace_id"`
+//! (16 hex digits — explicit propagation bypasses sampling) or when
+//! the `COGNATE_TRACE_SAMPLE` sampler hits; the id is echoed in the
+//! reply either way. Jobs carry their `TraceCtx` across the router
+//! into whichever shard dequeues them; the shard backfills the queue /
+//! linger / featurize intervals via `trace::record` since it only
+//! learns their boundaries after the fact.
 //!
 //! Telemetry (canonical names in ROADMAP.md "Telemetry"): every job
 //! dequeued by ANY shard bumps `serve.jobs_total` and observes
@@ -40,7 +53,8 @@
 //! (`serve.shard_jobs_total.<i>`, `serve.shard_linger_us.<i>`) are
 //! registered through `registry()` directly, never the macros (a
 //! macro call site caches one name forever). Error replies of any kind
-//! bump `serve.errors_total`.
+//! bump `serve.errors_total` exactly once — every error reply is built
+//! by [`error_reply`], the single site that touches the counter.
 //!
 //! This file is a `cognate-lint` panic-free zone: no `unwrap`/`expect`/
 //! `panic!`/slice indexing outside `#[cfg(test)]` — a malformed client
@@ -54,6 +68,7 @@ use crate::sparse::features::density_map;
 use crate::sparse::Csr;
 use crate::train::{config_features, ConfigFeatures, ZEncoder};
 use crate::util::json::Json;
+use crate::util::trace::{self, TraceCtx, TraceSpan};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -68,6 +83,14 @@ pub struct Job {
     pub matrix: Csr,
     pub reply: mpsc::Sender<Json>,
     pub arrived: Instant,
+    /// Trace context carried across the router (`NONE` = untraced; the
+    /// shard's backfilled spans parent to `trace.span`, the request's
+    /// `serve.accept` root).
+    pub trace: TraceCtx,
+    /// Arrival timestamp on the trace clock (`trace::now_us`), so the
+    /// dequeuing shard can backfill the `serve.queue` interval. 0 when
+    /// untraced.
+    pub t0_us: u64,
 }
 
 /// Default (and adaptive-cap) linger window for batch coalescing.
@@ -302,7 +325,12 @@ pub fn serve_models(
             max_jobs: opts.max_jobs,
             local,
         };
-        shard_threads.push(std::thread::spawn(move || shard_loop(model, rx, ctl)));
+        // Named so logger/trace output identifies the shard.
+        let t = std::thread::Builder::new()
+            .name(format!("shard-{idx}"))
+            .spawn(move || shard_loop(model, rx, ctl))
+            .context("spawn shard thread")?;
+        shard_threads.push(t);
         shards.push(ShardHandle { tx, depth });
     }
     let router = Arc::new(Router { shards, done: done.clone() });
@@ -317,7 +345,7 @@ pub fn serve_models(
         let Ok(stream) = stream else { continue };
         crate::counter!("serve.connections_total").inc();
         let router = router.clone();
-        std::thread::spawn(move || {
+        let _ = std::thread::Builder::new().name("conn".into()).spawn(move || {
             let _ = handle_conn(stream, &router);
         });
     }
@@ -405,6 +433,9 @@ fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: 
     let jobs_ctr = reg.counter(&format!("serve.shard_jobs_total.{}", ctl.idx));
     let linger_gauge = reg.gauge(&format!("serve.shard_linger_us.{}", ctl.idx));
     linger_gauge.set(ctl.linger.window().as_micros() as f64);
+    // Per-shard batch ordinal, attached as the `batch` span arg so one
+    // exported trace shows which jobs coalesced together.
+    let mut batch_seq: u64 = 0;
 
     loop {
         if ctl.done.load(Ordering::Acquire) {
@@ -423,8 +454,13 @@ fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: 
         // and would make every lone job look like backlog).
         let backlog_wait = first.arrived.elapsed();
         // Dynamic batching: collect more jobs within the linger window,
-        // up to the featurizer batch width.
-        let mut batch = vec![first];
+        // up to the featurizer batch width. `pops` stamps (trace clock)
+        // when each traced job left the channel, splitting its wait
+        // into queue (channel) and linger (batch-coalescing) spans.
+        let mut batch = Vec::with_capacity(feat_b);
+        let mut pops = Vec::with_capacity(feat_b);
+        pops.push(if first.trace.active() { trace::now_us() } else { 0 });
+        batch.push(first);
         let deadline = Instant::now() + ctl.linger.window();
         while batch.len() < feat_b {
             let now = Instant::now();
@@ -432,13 +468,40 @@ fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: 
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(job) => batch.push(job),
+                Ok(job) => {
+                    pops.push(if job.trace.active() { trace::now_us() } else { 0 });
+                    batch.push(job);
+                }
                 Err(_) => break,
             }
         }
         let filled_early = batch.len() >= feat_b && Instant::now() < deadline;
         let n_batched = batch.len();
         let dequeued = Instant::now();
+        batch_seq += 1;
+        let (shard_arg, batch_arg) = (ctl.idx as i64, batch_seq as i64);
+        // One traced job makes the whole batch's umbrella span worth
+        // emitting (parented under that job's request tree).
+        let batch_tctx = batch.iter().find(|j| j.trace.active()).map(|j| j.trace);
+        let dequeued_us = if batch_tctx.is_some() { trace::now_us() } else { 0 };
+        for (job, pop) in batch.iter().zip(pops.iter()) {
+            if job.trace.active() {
+                trace::record(
+                    "serve.queue",
+                    job.trace,
+                    job.t0_us,
+                    pop.saturating_sub(job.t0_us),
+                    &[("shard", shard_arg)],
+                );
+                trace::record(
+                    "serve.linger",
+                    job.trace,
+                    *pop,
+                    dequeued_us.saturating_sub(*pop),
+                    &[("shard", shard_arg), ("batch", batch_arg)],
+                );
+            }
+        }
         crate::histogram!("serve.batch_size").observe(n_batched as u64);
         // One queue-wait observation and one jobs_total bump per job —
         // adjacent so the stats invariant has no wide race window.
@@ -452,9 +515,26 @@ fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: 
         let dmaps: Vec<Vec<f32>> = batch.iter().map(|j| density_map(&j.matrix)).collect();
         let dmap_refs: Vec<&[f32]> = dmaps.iter().map(|d| d.as_slice()).collect();
         let t_feat = Instant::now();
+        let t_feat_us = if batch_tctx.is_some() { trace::now_us() } else { 0 };
         let featurized = model.featurize(&dmap_refs);
         let feat_elapsed = t_feat.elapsed();
         crate::histogram!("serve.featurize_us").observe_duration(feat_elapsed);
+        if batch_tctx.is_some() {
+            // One backend call serves the whole batch: every traced job
+            // gets the shared featurize interval in its own tree.
+            let feat_end_us = trace::now_us();
+            for job in &batch {
+                if job.trace.active() {
+                    trace::record(
+                        "serve.featurize",
+                        job.trace,
+                        t_feat_us,
+                        feat_end_us.saturating_sub(t_feat_us),
+                        &[("shard", shard_arg), ("batch", batch_arg)],
+                    );
+                }
+            }
+        }
         match featurized {
             Ok(embeds) => {
                 // featurize_ms is shared across the batch (one call).
@@ -463,7 +543,11 @@ fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: 
                     let queue_wait_ms =
                         dequeued.duration_since(job.arrived).as_secs_f64() * 1e3;
                     let t_score = Instant::now();
+                    let score_span = TraceSpan::child("serve.score", job.trace)
+                        .arg("shard", shard_arg)
+                        .arg("batch", batch_arg);
                     let scored = model.score(&embed, job.matrix.cols);
+                    drop(score_span);
                     let score_elapsed = t_score.elapsed();
                     crate::histogram!("serve.score_us").observe_duration(score_elapsed);
                     let resp = match scored {
@@ -494,10 +578,7 @@ fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: 
                                 ),
                             ])
                         }
-                        Err(e) => {
-                            crate::counter!("serve.errors_total").inc();
-                            Json::obj(vec![("error", Json::Str(format!("score: {e}")))])
-                        }
+                        Err(e) => error_reply(format!("score: {e}")),
                     };
                     let _ = job.reply.send(resp);
                     ctl.depth.fetch_sub(1, Ordering::Relaxed);
@@ -505,14 +586,19 @@ fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: 
             }
             Err(e) => {
                 for job in &batch {
-                    crate::counter!("serve.errors_total").inc();
-                    let _ = job.reply.send(Json::obj(vec![(
-                        "error",
-                        Json::Str(format!("featurize: {e}")),
-                    )]));
+                    let _ = job.reply.send(error_reply(format!("featurize: {e}")));
                     ctl.depth.fetch_sub(1, Ordering::Relaxed);
                 }
             }
+        }
+        if let Some(tctx) = batch_tctx {
+            trace::record(
+                "serve.batch",
+                tctx,
+                dequeued_us,
+                trace::now_us().saturating_sub(dequeued_us),
+                &[("shard", shard_arg), ("batch", batch_arg)],
+            );
         }
 
         ctl.linger.on_batch(n_batched, feat_b, filled_early, backlog_wait);
@@ -532,6 +618,37 @@ fn shard_loop(mut model: Box<dyn ServeModel>, rx: mpsc::Receiver<Job>, mut ctl: 
     }
 }
 
+/// Build an error reply, bumping `serve.errors_total` — the only call
+/// site that touches the counter, so "exactly once per error reply"
+/// holds by construction. (The audit that motivated this: the
+/// parse-error and oversized-dimension paths each had their own bump
+/// next to their own `Json::obj`, which stayed correct only as long as
+/// nobody added a reply without a bump or a bump without a reply.)
+fn error_reply(msg: String) -> Json {
+    crate::counter!("serve.errors_total").inc();
+    Json::obj(vec![("error", Json::Str(msg))])
+}
+
+/// Client-supplied trace id: 16 hex digits (the format replies echo).
+/// 0 (absent / unparseable) means "let the sampler decide".
+fn parse_trace_id(req: &Json) -> u64 {
+    req.get("trace_id")
+        .and_then(|v| v.as_str())
+        .and_then(|s| u64::from_str_radix(s.trim(), 16).ok())
+        .unwrap_or(0)
+}
+
+/// Echo the request's trace id into a reply object (success or error)
+/// so clients can join replies to exported spans. No-op untraced.
+fn echo_trace_id(resp: &mut Json, ctx: TraceCtx) {
+    if !ctx.active() {
+        return;
+    }
+    if let Json::Obj(m) = resp {
+        m.insert("trace_id".to_string(), Json::Str(format!("{:016x}", ctx.trace_id)));
+    }
+}
+
 fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -541,11 +658,13 @@ fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
+        // Stamped before parsing: the accept root span is backdated
+        // here once we know whether this line is traced.
+        let t_line = trace::now_us();
         let req = match Json::parse(&line) {
             Ok(r) => r,
             Err(e) => {
-                crate::counter!("serve.errors_total").inc();
-                let err = Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]);
+                let err = error_reply(format!("bad request: {e}"));
                 writeln!(writer, "{}", err.to_string())?;
                 continue;
             }
@@ -562,36 +681,79 @@ fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
             )?;
             continue;
         }
+        // Control request: drain completed spans as Chrome trace JSON
+        // (answered here for the same reasons as {"stats": true}).
+        if req.get("trace").and_then(|v| v.as_bool()) == Some(true) {
+            crate::counter!("serve.trace_requests_total").inc();
+            writeln!(writer, "{}", trace::to_chrome(&trace::drain()).to_string())?;
+            continue;
+        }
+        // A client-supplied trace id always traces (explicit
+        // propagation bypasses sampling); otherwise flip the sampler's
+        // coin. The root interval starts back at t_line so the parse
+        // span nests inside it.
+        let client_tid = parse_trace_id(&req);
+        let trace_id = if client_tid != 0 {
+            client_tid
+        } else if trace::sample_hit() {
+            trace::next_id()
+        } else {
+            0
+        };
+        let root = TraceSpan::root_at("serve.accept", trace_id, t_line);
+        let rctx = root.ctx();
         match parse_request(&req) {
             Ok((id, k, matrix)) => {
+                if rctx.active() {
+                    trace::record(
+                        "serve.parse",
+                        rctx,
+                        t_line,
+                        trace::now_us().saturating_sub(t_line),
+                        &[("id", id)],
+                    );
+                }
                 let (rtx, rrx) = mpsc::channel();
-                let job = Job { id, k, matrix, reply: rtx, arrived: Instant::now() };
-                match router.route(job) {
+                let t0_us = if rctx.active() { trace::now_us() } else { 0 };
+                let job = Job {
+                    id,
+                    k,
+                    matrix,
+                    reply: rtx,
+                    arrived: Instant::now(),
+                    trace: rctx,
+                    t0_us,
+                };
+                let route_span = TraceSpan::child("serve.route", rctx);
+                let routed = router.route(job);
+                drop(route_span);
+                match routed {
                     Ok(()) => {
-                        let resp = rrx.recv().unwrap_or_else(|_| {
-                            crate::counter!("serve.errors_total").inc();
-                            Json::obj(vec![("error", Json::Str("batcher died".into()))])
-                        });
+                        let mut resp = rrx
+                            .recv()
+                            .unwrap_or_else(|_| error_reply("batcher died".into()));
+                        echo_trace_id(&mut resp, rctx);
+                        let reply_span = TraceSpan::child("serve.reply", rctx);
                         writeln!(writer, "{}", resp.to_string())?;
+                        drop(reply_span);
                     }
                     Err(_) => {
                         // Shards already shut down (job budget spent):
                         // still reply with well-formed JSON.
-                        crate::counter!("serve.errors_total").inc();
-                        let err = Json::obj(vec![(
-                            "error",
-                            Json::Str("service shutting down".into()),
-                        )]);
+                        let mut err = error_reply("service shutting down".into());
+                        echo_trace_id(&mut err, rctx);
                         writeln!(writer, "{}", err.to_string())?;
                     }
                 }
             }
             Err(e) => {
-                crate::counter!("serve.errors_total").inc();
-                let err = Json::obj(vec![("error", Json::Str(e.to_string()))]);
+                let mut err = error_reply(e.to_string());
+                echo_trace_id(&mut err, rctx);
                 writeln!(writer, "{}", err.to_string())?;
             }
         }
+        // `root` drops here: the serve.accept event closes only after
+        // the reply (or error) hit the socket.
     }
     crate::debug!("connection from {peer:?} closed");
     Ok(())
@@ -643,13 +805,19 @@ fn parse_request(req: &Json) -> Result<(i64, usize, Csr)> {
 /// built a `Json::Arr` with three boxed nodes per nonzero, which
 /// dominated client-side request cost for large matrices.
 pub fn request_payload(id: i64, k: usize, m: &Csr) -> String {
+    request_payload_traced(id, k, m, 0)
+}
+
+/// [`request_payload`] with a trace id (16 hex digits in the wire
+/// format); 0 omits the field, leaving the server's sampler in charge.
+pub fn request_payload_traced(id: i64, k: usize, m: &Csr, trace_id: u64) -> String {
     use std::fmt::Write as _;
-    let mut s = String::with_capacity(64 + 16 * m.nnz());
-    let _ = write!(
-        s,
-        "{{\"id\":{id},\"k\":{k},\"rows\":{},\"cols\":{},\"coo\":[",
-        m.rows, m.cols
-    );
+    let mut s = String::with_capacity(96 + 16 * m.nnz());
+    let _ = write!(s, "{{\"id\":{id},\"k\":{k},");
+    if trace_id != 0 {
+        let _ = write!(s, "\"trace_id\":\"{trace_id:016x}\",");
+    }
+    let _ = write!(s, "\"rows\":{},\"cols\":{},\"coo\":[", m.rows, m.cols);
     let mut first = true;
     for r in 0..m.rows {
         for (&c, &v) in m.row_indices(r).iter().zip(m.row_values(r)) {
@@ -666,12 +834,35 @@ pub fn request_payload(id: i64, k: usize, m: &Csr) -> String {
 
 /// Blocking client helper (used by tests and the quickstart example).
 pub fn request(addr: std::net::SocketAddr, id: i64, k: usize, m: &Csr) -> Result<Json> {
+    request_traced(addr, id, k, m, 0)
+}
+
+/// [`request`] carrying a client-chosen trace id (0 = untraced unless
+/// the server's sampler hits). The reply echoes the id as `trace_id`.
+pub fn request_traced(
+    addr: std::net::SocketAddr,
+    id: i64,
+    k: usize,
+    m: &Csr,
+    trace_id: u64,
+) -> Result<Json> {
     let mut stream = TcpStream::connect(addr)?;
-    writeln!(stream, "{}", request_payload(id, k, m))?;
+    writeln!(stream, "{}", request_payload_traced(id, k, m, trace_id))?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line)?;
     Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+/// Fetch the drained span rings of a running service as Chrome-trace
+/// JSON via the `{"trace": true}` control request.
+pub fn request_trace(addr: std::net::SocketAddr) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{}", Json::obj(vec![("trace", Json::Bool(true))]).to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(&line).map_err(|e| anyhow::anyhow!("bad trace response: {e}"))
 }
 
 /// Fetch a live telemetry snapshot from a running service via the
@@ -789,6 +980,32 @@ mod tests {
         // At the cap itself, requests still parse.
         let ok = Json::parse(r#"{"rows": 4, "cols": 4, "coo": [[0, 1, 2.0]]}"#).unwrap();
         assert!(parse_request(&ok).is_ok());
+    }
+
+    #[test]
+    fn traced_payload_carries_and_parses_trace_id() {
+        let m = Csr::from_coo(2, 2, vec![(0, 1, 1.0)]);
+        let payload = request_payload_traced(3, 2, &m, 0xABCD);
+        let req = Json::parse(&payload).expect("traced payload is valid JSON");
+        assert_eq!(parse_trace_id(&req), 0xABCD);
+        let (id, k, _) = parse_request(&req).expect("traced payload still parses");
+        assert_eq!((id, k), (3, 2));
+        // Untraced payloads omit the field entirely.
+        let plain = Json::parse(&request_payload(3, 2, &m)).unwrap();
+        assert_eq!(parse_trace_id(&plain), 0);
+        assert!(plain.get("trace_id").is_none());
+    }
+
+    #[test]
+    fn echo_trace_id_tags_replies_only_when_traced() {
+        let mut r = Json::obj(vec![("id", Json::Num(1.0))]);
+        echo_trace_id(&mut r, TraceCtx::NONE);
+        assert!(r.get("trace_id").is_none());
+        echo_trace_id(&mut r, TraceCtx { trace_id: 0xF00D, span: 1 });
+        assert_eq!(
+            r.get("trace_id").and_then(|v| v.as_str()),
+            Some("000000000000f00d")
+        );
     }
 
     #[test]

@@ -167,7 +167,13 @@ where
             ..opts.clone()
         };
         let mut local = |i: usize| scorer(i);
-        crate::time_span!("sa.chain_us", anneal(platform, &mut local, &chain_opts))
+        // Nested under the worker's `pool.task` span when traced; the
+        // lexical determinism rule stays satisfied because all timing
+        // lives behind the macros.
+        crate::trace_span!(
+            "sa.chain",
+            crate::time_span!("sa.chain_us", anneal(platform, &mut local, &chain_opts))
+        )
     });
 
     let mut best_index = 0usize;

@@ -331,7 +331,10 @@ pub fn train(
                 batch.weight[row] = if d == 0.0 { 0.0 } else { 1.0 };
             }
             crate::histogram!("train.pair_sample_us").observe_duration(t_sample.elapsed());
-            let step_loss = crate::time_span!("train.step_us", driver.train_step(&batch)?);
+            let step_loss = crate::trace_span!(
+                "train.step",
+                crate::time_span!("train.step_us", driver.train_step(&batch)?)
+            );
             crate::counter!("train.steps_total").inc();
             loss_sum += step_loss as f64;
         }

@@ -1,0 +1,21 @@
+// Seeded violations for `trace-canon`. Self-tested under the virtual
+// path rust/src/coordinator/fixture.rs — span names are interned
+// against util::trace::CANON at runtime, so a name the canon does not
+// know becomes an inert span that silently records nothing, and a
+// dynamic name defeats the static check entirely.
+
+use crate::util::trace::{self, TraceCtx, TraceSpan};
+
+fn handle(ctx: TraceCtx, phase: &'static str) {
+    // Not in util::trace::CANON.
+    crate::trace_span!("serve.rogue_phase", step());
+    // Not `layer.name` shaped.
+    let shapeless = TraceSpan::root("JustOneWord");
+    drop(shapeless);
+    // Dynamic name: unverifiable statically.
+    crate::trace_span!(phase, step());
+    // Backfilled span with a name the canon does not know.
+    trace::record("serve.not_canonical", ctx, 0, 1, &[]);
+}
+
+fn step() {}

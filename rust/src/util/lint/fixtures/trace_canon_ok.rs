@@ -1,0 +1,17 @@
+// Compliant twin of trace_canon_bad.rs: every span name is a plain
+// string literal, `layer.name` shaped, and present in
+// util::trace::CANON, so the lint pass can prove statically that no
+// call site ever degrades to an inert span.
+
+use crate::util::trace::{self, TraceCtx, TraceSpan};
+
+fn handle(ctx: TraceCtx) {
+    crate::trace_span!("serve.score", step());
+    let root = TraceSpan::root("pool.task").arg("task", 0);
+    let child = TraceSpan::child("sa.chain", root.ctx());
+    drop(child);
+    drop(root);
+    trace::record("serve.queue", ctx, 0, 1, &[("shard", 0)]);
+}
+
+fn step() {}

@@ -6,8 +6,10 @@
 //! `util::metrics::CANON` (and the ROADMAP table must match both),
 //! `counter!`-family macros must never be handed dynamic names, every
 //! `unsafe` needs an adjacent `// SAFETY:` argument, the serve request
-//! path and metrics hot paths stay panic-free, and the kernels / SA
-//! score paths stay deterministic.
+//! path and metrics hot paths stay panic-free, the kernels / SA
+//! score paths stay deterministic, and every span name handed to
+//! `trace_span!` / `TraceSpan` / `trace::record` is a literal present
+//! in `util::trace::CANON`.
 //!
 //! Three front doors, all sharing [`lint_repo`]:
 //!
@@ -404,6 +406,16 @@ mod fixture_tests {
             "rust/src/kernels/fixture.rs",
             include_str!("fixtures/determinism_bad.rs"),
             include_str!("fixtures/determinism_ok.rs"),
+        );
+    }
+
+    #[test]
+    fn trace_canon_fixture() {
+        check_pair(
+            "trace-canon",
+            "rust/src/coordinator/fixture.rs",
+            include_str!("fixtures/trace_canon_bad.rs"),
+            include_str!("fixtures/trace_canon_ok.rs"),
         );
     }
 }

@@ -13,6 +13,7 @@
 //! | `safety-comment` | every `unsafe` is immediately preceded by a `// SAFETY:` comment |
 //! | `panic-audit` | no `unwrap()`/`expect(`/`panic!`/slice-indexing in the serve request path or metrics hot paths (outside `#[cfg(test)]`) |
 //! | `determinism` | no `HashMap`/`HashSet`/`SystemTime`/`Instant::now` in `kernels/` or `search/anneal.rs` (use `util::rng::Rng`) |
+//! | `trace-canon` | span name literals in `trace_span!` / `TraceSpan` constructors / `trace::record` are plain literals, `layer.name` shaped, and present in `util::trace::CANON` |
 //!
 //! Any finding can be suppressed with `// lint:allow(<rule>) reason` on
 //! the same line or the line directly above — the reason is mandatory.
@@ -26,13 +27,15 @@ pub const RULE_ALIASING: &str = "macro-instanced-aliasing";
 pub const RULE_SAFETY: &str = "safety-comment";
 pub const RULE_PANIC: &str = "panic-audit";
 pub const RULE_DETERMINISM: &str = "determinism";
+pub const RULE_TRACE_CANON: &str = "trace-canon";
 
-pub const ALL_RULES: [&str; 5] = [
+pub const ALL_RULES: [&str; 6] = [
     RULE_METRIC_CANON,
     RULE_ALIASING,
     RULE_SAFETY,
     RULE_PANIC,
     RULE_DETERMINISM,
+    RULE_TRACE_CANON,
 ];
 
 /// One diagnostic, rendered as `path:line: rule: message`.
@@ -639,6 +642,103 @@ pub fn check_determinism(ctx: &FileCtx, out: &mut Vec<Finding>) {
     }
 }
 
+// ---- rule: trace-canon -----------------------------------------------------
+
+/// Shared name checks for every span-name-bearing form: must be
+/// `layer.name` shaped and present in `util::trace::CANON` (unknown
+/// names degrade to inert spans at runtime — silently missing data —
+/// so the drift is caught here instead).
+fn check_trace_name(ctx: &FileCtx, out: &mut Vec<Finding>, line: u32, name: &str, via: &str) {
+    if !is_canon_shaped(name) {
+        ctx.push(
+            out,
+            RULE_TRACE_CANON,
+            line,
+            format!("trace span name {name:?} is not `layer.name` shaped (lowercase dotted segments)"),
+        );
+        return;
+    }
+    if crate::util::trace::canon_idx(name).is_none() {
+        ctx.push(
+            out,
+            RULE_TRACE_CANON,
+            line,
+            format!(
+                "{name:?} is not in util::trace::CANON — an unknown name makes {via} an inert \
+                 span that silently records nothing; add the name to the canon (and the ROADMAP \
+                 tracing section) in the same PR"
+            ),
+        );
+    }
+}
+
+/// First-argument check shared by the macro and constructor forms:
+/// `open` indexes the `(`. `$name` (macro_rules bodies) is exempt;
+/// anything that is not a plain string literal defeats the static
+/// check and is itself a finding.
+fn check_trace_arg(ctx: &FileCtx, out: &mut Vec<Finding>, open: usize, via: &str) {
+    let line = ctx.line(open);
+    match ctx.kind(open + 1) {
+        Some(Tok::Punct('$')) => {}
+        Some(Tok::Str(name)) => {
+            let name = name.clone();
+            check_trace_name(ctx, out, line, &name, via);
+        }
+        _ => ctx.push(
+            out,
+            RULE_TRACE_CANON,
+            line,
+            format!(
+                "{via} must be handed a plain string-literal span name so the canon check can \
+                 run statically (dynamic names also defeat the zero-alloc name interning)"
+            ),
+        ),
+    }
+}
+
+/// `TraceSpan` constructors whose first argument is a span name.
+const TRACE_CTORS: [&str; 5] = ["root", "root_at", "root_with_id", "child", "begin"];
+
+pub fn check_trace_canon(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    for s in 0..ctx.sig.len() {
+        let line = ctx.line(s);
+        // Tests deliberately probe non-canonical names (inert-span
+        // behaviour), so only non-test code is checked.
+        if ctx.in_test_span(line) {
+            continue;
+        }
+        // Macro form: `trace_span ! ( "name" , body )`.
+        if ctx.is_ident(s, "trace_span") && ctx.is_punct(s + 1, '!') && ctx.is_punct(s + 2, '(') {
+            check_trace_arg(ctx, out, s + 2, "trace_span!");
+            continue;
+        }
+        // Constructor form: `TraceSpan :: <ctor> ( "name" , … )`.
+        if ctx.is_ident(s, "TraceSpan")
+            && ctx.is_punct(s + 1, ':')
+            && ctx.is_punct(s + 2, ':')
+            && ctx.is_punct(s + 4, '(')
+        {
+            if let Some(Tok::Ident(ctor)) = ctx.kind(s + 3) {
+                if TRACE_CTORS.contains(&ctor.as_str()) {
+                    let via = format!("TraceSpan::{ctor}");
+                    check_trace_arg(ctx, out, s + 4, &via);
+                }
+            }
+            continue;
+        }
+        // Backfill form: `trace :: record ( "name" , … )`.
+        if ctx.is_ident(s, "record")
+            && s >= 3
+            && ctx.is_ident(s - 3, "trace")
+            && ctx.is_punct(s - 2, ':')
+            && ctx.is_punct(s - 1, ':')
+            && ctx.is_punct(s + 1, '(')
+        {
+            check_trace_arg(ctx, out, s + 1, "trace::record");
+        }
+    }
+}
+
 /// Run every rule over one file. `used` collects canon-name references
 /// for the corpus-level unused-entry check.
 pub fn lint_file_ctx(
@@ -651,6 +751,7 @@ pub fn lint_file_ctx(
     check_safety_comments(ctx, &mut out);
     check_panic_audit(ctx, &mut out);
     check_determinism(ctx, &mut out);
+    check_trace_canon(ctx, &mut out);
     out
 }
 
@@ -792,6 +893,56 @@ mod tests {
         assert_eq!(rules_of(&run("rust/src/util/metrics.rs", without)), vec![RULE_PANIC]);
         let wrong_rule = "// lint:allow(determinism) misdirected\nfn f(v: &[u64]) -> u64 { v[0] }";
         assert_eq!(rules_of(&run("rust/src/util/metrics.rs", wrong_rule)), vec![RULE_PANIC]);
+    }
+
+    #[test]
+    fn trace_canon_checks_macro_ctor_and_record_forms() {
+        let ok = run(
+            "rust/src/x.rs",
+            r#"fn f() { crate::trace_span!("sa.chain", work()); }"#,
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        let bad = run(
+            "rust/src/x.rs",
+            r#"fn f() { crate::trace_span!("sa.rogue", work()); }"#,
+        );
+        assert_eq!(rules_of(&bad), vec![RULE_TRACE_CANON], "{bad:?}");
+        let shape = run(
+            "rust/src/x.rs",
+            r#"fn f() { let s = TraceSpan::root("NotShaped"); }"#,
+        );
+        assert_eq!(rules_of(&shape), vec![RULE_TRACE_CANON], "{shape:?}");
+        let ctor_ok = run(
+            "rust/src/x.rs",
+            r#"fn f(c: TraceCtx) { let s = TraceSpan::child("serve.score", c); }"#,
+        );
+        assert!(ctor_ok.is_empty(), "{ctor_ok:?}");
+        let rec = run(
+            "rust/src/x.rs",
+            r#"fn f(c: TraceCtx) { trace::record("serve.bogus", c, 0, 1, &[]); }"#,
+        );
+        assert_eq!(rules_of(&rec), vec![RULE_TRACE_CANON], "{rec:?}");
+    }
+
+    #[test]
+    fn trace_canon_flags_dynamic_names_and_exempts_macro_dollars_and_tests() {
+        let dynamic = run(
+            "rust/src/x.rs",
+            r#"fn f(name: &'static str) { crate::trace_span!(name, work()); }"#,
+        );
+        assert_eq!(rules_of(&dynamic), vec![RULE_TRACE_CANON], "{dynamic:?}");
+        // `$name` in macro_rules bodies is how the macro itself expands.
+        assert!(run(
+            "rust/src/x.rs",
+            "macro_rules! t { ($name:expr) => { TraceSpan::root($name) }; }"
+        )
+        .is_empty());
+        // Tests probe inert behaviour with non-canonical names on purpose.
+        let tested =
+            "#[cfg(test)]\nmod tests {\n fn g() { let s = TraceSpan::root(\"not.canonical\"); }\n}";
+        assert!(run("rust/src/x.rs", tested).is_empty());
+        // Unqualified `record(` and plain fn defs must not match.
+        assert!(run("rust/src/x.rs", "fn record(x: u64) -> u64 { x }").is_empty());
     }
 
     #[test]

@@ -1,5 +1,15 @@
 //! Tiny timestamped stderr logger with runtime-settable verbosity.
 //! (No `log`/`env_logger` facade needed for a single binary.)
+//!
+//! Each line is prefixed with elapsed milliseconds, the calling
+//! thread's name (shard threads are named; unnamed threads fall back
+//! to their trace ordinal `tN`), the level tag, and — when the thread
+//! is inside a traced scope — the active trace id, so stderr output
+//! can be correlated with exported Chrome traces:
+//!
+//! ```text
+//! [    152.3ms shard-2 info trace=00ab54c1d2e3f401] batch of 4 scored
+//! ```
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
@@ -45,9 +55,41 @@ pub fn elapsed() -> f64 {
     START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
+/// Label for the calling thread: its OS name when set (serve names
+/// its shard/router threads), otherwise the stable trace-thread
+/// ordinal as `tN`.
+fn thread_label() -> String {
+    let cur = std::thread::current();
+    match cur.name() {
+        Some(n) if !n.is_empty() => n.to_string(),
+        _ => format!("t{}", crate::util::trace::tid()),
+    }
+}
+
+/// Pure formatter behind [`log`], split out so the prefix shape is
+/// testable without capturing stderr. `trace_id == 0` (untraced)
+/// omits the `trace=` field.
+pub fn format_line(
+    elapsed_ms: f64,
+    thread: &str,
+    tag: &str,
+    trace_id: u64,
+    msg: &std::fmt::Arguments,
+) -> String {
+    if trace_id != 0 {
+        format!("[{elapsed_ms:>9.1}ms {thread} {tag} trace={trace_id:016x}] {msg}")
+    } else {
+        format!("[{elapsed_ms:>9.1}ms {thread} {tag}] {msg}")
+    }
+}
+
 pub fn log(lvl: u8, tag: &str, msg: std::fmt::Arguments) {
     if lvl <= level() {
-        eprintln!("[{:>9.3}s {tag}] {msg}", elapsed());
+        let ctx = crate::util::trace::current();
+        eprintln!(
+            "{}",
+            format_line(elapsed() * 1e3, &thread_label(), tag, ctx.trace_id, &msg)
+        );
     }
 }
 
@@ -85,6 +127,17 @@ mod tests {
         assert_eq!(parse_level(" debug "), Some(3));
         assert_eq!(parse_level("verbose"), None);
         assert_eq!(parse_level("7"), None);
+    }
+
+    #[test]
+    fn format_line_prefix_shape() {
+        let plain = format_line(152.34, "shard-2", "info", 0, &format_args!("scored 4"));
+        assert!(plain.starts_with('['), "{plain}");
+        assert!(plain.contains("ms shard-2 info] scored 4"), "{plain}");
+        assert!(!plain.contains("trace="), "{plain}");
+
+        let traced = format_line(7.0, "main", "warn", 0xAB54C1, &format_args!("slow"));
+        assert!(traced.contains("ms main warn trace=0000000000ab54c1] slow"), "{traced}");
     }
 
     #[test]

@@ -70,6 +70,7 @@ pub const CANON: &[(&str, Kind)] = &[
     ("serve.errors_total", Kind::Counter),
     ("serve.connections_total", Kind::Counter),
     ("serve.stats_requests_total", Kind::Counter),
+    ("serve.trace_requests_total", Kind::Counter),
     ("serve.queue_wait_us", Kind::Histogram),
     ("serve.batch_size", Kind::Histogram),
     ("serve.featurize_us", Kind::Histogram),
@@ -95,6 +96,7 @@ pub const CANON: &[(&str, Kind)] = &[
     ("pool.task_wait_us", Kind::Histogram),
     ("dataset.matrix_eval_us", Kind::Histogram),
     ("dataset.lpt_skew", Kind::Gauge),
+    ("trace.dropped_total", Kind::Counter),
 ];
 
 /// Exact-match lookup into [`CANON`] (instanced names match only their

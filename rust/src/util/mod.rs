@@ -1,7 +1,8 @@
 //! Self-contained substrates: PRNG, JSON, statistics, thread pool,
-//! tables/CSV, logging, telemetry metrics, a bench harness, and the
-//! `cognate-lint` static analysis pass. The offline build has only
-//! `xla` + `anyhow` as external crates, so everything else lives here.
+//! tables/CSV, logging, telemetry metrics, request tracing, a bench
+//! harness, and the `cognate-lint` static analysis pass. The offline
+//! build has only `xla` + `anyhow` as external crates, so everything
+//! else lives here.
 
 pub mod bench;
 pub mod json;
@@ -12,3 +13,4 @@ pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod trace;

@@ -10,6 +10,7 @@
 //! disjoint and no per-item `Mutex` is needed (the seed implementation
 //! paid a lock + unlock per item, which dominated for cheap jobs).
 
+use crate::util::trace::{self, TraceSpan};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of worker threads to use by default: all available cores,
@@ -53,9 +54,25 @@ where
         return Vec::new();
     }
     crate::counter!("pool.tasks_total").add(n as u64);
+    // Coarse tracing: each task runs under a `pool.task` span — child
+    // of the caller's ambient context when one is active (workers are
+    // fresh threads, so the context is captured here by value),
+    // otherwise a sampled root. The span is entered so work inside the
+    // task (e.g. `sa.chain`) links into the same tree.
+    let caller = trace::current();
+    let traced_f = |i: usize, t: &T| {
+        let span = if caller.active() {
+            TraceSpan::child("pool.task", caller)
+        } else {
+            TraceSpan::root("pool.task")
+        }
+        .arg("task", i as i64);
+        let _g = trace::enter(span.ctx());
+        f(i, t)
+    };
     let threads = threads.max(1).min(n);
     if threads == 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        return items.iter().enumerate().map(|(i, t)| traced_f(i, t)).collect();
     }
 
     let cursor = AtomicUsize::new(0);
@@ -69,7 +86,7 @@ where
         for _ in 0..threads {
             let ptr = out_ptr;
             let cursor = &cursor;
-            let f = &f;
+            let f = &traced_f;
             scope.spawn(move || loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= n {

@@ -1,0 +1,930 @@
+//! Event-based request tracing beside the metrics registry.
+//!
+//! Where `util::metrics` aggregates (a histogram can say p95
+//! `serve.queue_wait_us` moved, not why), this module records *spans*:
+//! named, timestamped intervals linked into a per-request tree by a
+//! 64-bit trace id, so one served request yields
+//! `accept → parse → route → queue → linger → featurize → score → reply`
+//! with shard and batch ids attached as args.
+//!
+//! Design constraints (mirroring the metrics substrate):
+//! * **Untraced spans are near-free.** A sample-miss span costs one
+//!   thread-local load plus one relaxed atomic load and a branch —
+//!   `bench_trace` gates this under 20ns. Sampling is controlled by
+//!   `COGNATE_TRACE_SAMPLE` (0.0–1.0; serve defaults to 0.01, CLI runs
+//!   to 1.0) via [`init_from_env`].
+//! * **The sampled path is allocation-free.** Completed spans are
+//!   written into fixed per-thread lock-free ring buffers
+//!   ([`RINGS`] rings × [`RING_CAP`] slots, every field an `AtomicU64`
+//!   behind a seqlock word — no `unsafe`). Overwriting a slot that was
+//!   never drained bumps `trace.dropped_total`.
+//! * **Context crosses threads by value.** [`TraceCtx`] is a `Copy`
+//!   pair `(trace_id, span_id)`; serve jobs carry it across the router
+//!   into whichever shard dequeues them, and [`record`] backfills spans
+//!   (queue wait) whose interval was timed on another thread.
+//! * **Names are canonical.** Every span name must appear in
+//!   [`CANON`] in `layer.name` form — enforced statically by the
+//!   `cognate-lint` `trace-canon` rule; unknown names degrade to inert
+//!   spans rather than corrupting the export.
+//!
+//! Export: [`drain`] snapshots-and-clears all rings;
+//! [`to_chrome`] serializes events to Chrome `trace_event` JSON
+//! (complete "X" phase events, µs timestamps) loadable in Perfetto or
+//! chrome://tracing. The CLI exposes this as `--trace-out PATH`, the
+//! serve protocol as a `{"trace": true}` control request, and
+//! `cognate trace --addr` fetches it from a live server.
+//!
+//! Trace ids come from a process-global SplitMix64 stream
+//! (`util::rng`) stepped with one `fetch_add` — id 0 is reserved as
+//! the "untraced" sentinel everywhere.
+
+use crate::counter;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+// ---- canonical span names -------------------------------------------------
+
+/// The canonical span-name table: every `trace_span!` /
+/// [`TraceSpan`] name the crate emits, in `layer.name` form. Like
+/// `metrics::CANON`, this table is load-bearing: the `cognate-lint`
+/// `trace-canon` rule checks every name literal against it, so adding
+/// a span means adding its name here in the same PR.
+pub const CANON: &[&str] = &[
+    "serve.accept",
+    "serve.parse",
+    "serve.route",
+    "serve.queue",
+    "serve.linger",
+    "serve.batch",
+    "serve.featurize",
+    "serve.score",
+    "serve.reply",
+    "train.step",
+    "sa.chain",
+    "pool.task",
+];
+
+/// Index of `name` in [`CANON`], or `None` for non-canonical names
+/// (which become inert spans at runtime and lint errors statically).
+pub fn canon_idx(name: &str) -> Option<u16> {
+    CANON.iter().position(|n| *n == name).map(|i| i as u16)
+}
+
+/// Arg keys spans may attach (stored as 1-based indices so events stay
+/// plain integers; 0 marks an empty arg slot).
+pub const ARG_KEYS: &[&str] = &["shard", "batch", "jobs", "id", "chain", "step", "task"];
+
+/// Ring buffers available process-wide; threads map onto them by
+/// thread ordinal modulo [`RINGS`].
+pub const RINGS: usize = 16;
+/// Completed-span slots per ring (overwrite-oldest beyond this).
+pub const RING_CAP: usize = 1024;
+/// Arg slots per span (shard + batch covers every current producer).
+pub const MAX_ARGS: usize = 2;
+
+const GAMMA: u64 = 0x9E3779B97F4A7C15;
+const NAME_INERT: u16 = u16::MAX;
+
+// ---- trace context --------------------------------------------------------
+
+/// Propagatable trace context: the request's trace id plus the span id
+/// children should parent to. `trace_id == 0` means "not traced" and
+/// makes every derived span inert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span: u64,
+}
+
+impl TraceCtx {
+    pub const NONE: TraceCtx = TraceCtx { trace_id: 0, span: 0 };
+
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.trace_id != 0
+    }
+}
+
+// ---- sampling + id generation ---------------------------------------------
+
+/// Sample probability as `f64` bits; 0 (the bits of +0.0) disables
+/// tracing entirely, which keeps the disabled fast path to one relaxed
+/// load.
+static SAMPLE_BITS: AtomicU64 = AtomicU64::new(0);
+
+/// Set the root-span sample probability (clamped to `[0, 1]`).
+pub fn set_sample(p: f64) {
+    let p = if p.is_finite() { p.clamp(0.0, 1.0) } else { 0.0 };
+    SAMPLE_BITS.store(p.to_bits(), Ordering::Relaxed);
+}
+
+/// Current root-span sample probability.
+pub fn sample() -> f64 {
+    f64::from_bits(SAMPLE_BITS.load(Ordering::Relaxed))
+}
+
+/// Initialise sampling from `COGNATE_TRACE_SAMPLE` (0.0–1.0), falling
+/// back to `default_p` when unset or unparseable (serve passes 0.01,
+/// CLI runs pass 1.0).
+pub fn init_from_env(default_p: f64) {
+    set_sample(parse_sample(
+        std::env::var("COGNATE_TRACE_SAMPLE").ok().as_deref(),
+        default_p,
+    ));
+}
+
+/// Pure half of [`init_from_env`]: `None` and unparseable specs fall
+/// back to `default_p` (with a warning for the latter).
+pub fn parse_sample(spec: Option<&str>, default_p: f64) -> f64 {
+    match spec {
+        None => default_p,
+        Some(v) => match v.trim().parse::<f64>() {
+            Ok(p) => p,
+            Err(_) => {
+                crate::warn!("COGNATE_TRACE_SAMPLE={v:?} not a number in [0,1]; using {default_p}");
+                default_p
+            }
+        },
+    }
+}
+
+fn id_state() -> &'static AtomicU64 {
+    static S: OnceLock<AtomicU64> = OnceLock::new();
+    // Deterministic process seed expanded through the shared SplitMix64
+    // so ids are well-mixed from the first draw.
+    S.get_or_init(|| AtomicU64::new(SplitMix64::new(0xC07_9A7E).next_u64()))
+}
+
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Next trace/span id: one SplitMix64 step over a shared atomic state
+/// (`fetch_add` of the golden gamma, then the mix), never 0.
+pub fn next_id() -> u64 {
+    let s = id_state().fetch_add(GAMMA, Ordering::Relaxed).wrapping_add(GAMMA);
+    let z = mix64(s);
+    if z == 0 {
+        1
+    } else {
+        z
+    }
+}
+
+// ---- per-thread state -----------------------------------------------------
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static CTX: Cell<TraceCtx> = const { Cell::new(TraceCtx::NONE) };
+    static TID: Cell<u64> = const { Cell::new(0) };
+    static SAMPLE_RNG: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Small ordinal identifying the calling thread in exported events
+/// (assigned on first traced use, stable for the thread's lifetime).
+pub fn tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            v
+        } else {
+            let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            t.set(v);
+            v
+        }
+    })
+}
+
+/// One root-span sampling decision, exposed for callers that must
+/// decide before they can construct the span (the serve handler picks
+/// the trace id first so client-supplied ids bypass sampling). The
+/// miss path is one relaxed load plus, for 0 < p < 1, one
+/// thread-local SplitMix64 step.
+#[inline]
+pub fn sample_hit() -> bool {
+    let bits = SAMPLE_BITS.load(Ordering::Relaxed);
+    if bits == 0 {
+        return false;
+    }
+    let p = f64::from_bits(bits);
+    p >= 1.0 || thread_hit(p)
+}
+
+/// Per-thread Bernoulli(p) draw via a thread-local SplitMix64 stream.
+#[inline]
+fn thread_hit(p: f64) -> bool {
+    SAMPLE_RNG.with(|r| {
+        let mut s = r.get();
+        if s == 0 {
+            s = next_id() | 1;
+        }
+        s = s.wrapping_add(GAMMA);
+        r.set(s);
+        let u = (mix64(s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < p
+    })
+}
+
+/// The calling thread's ambient trace context (set by [`enter`] /
+/// `trace_span!`; `TraceCtx::NONE` outside any traced scope).
+pub fn current() -> TraceCtx {
+    CTX.with(Cell::get)
+}
+
+/// Restores the previous ambient context on drop.
+pub struct ScopeGuard {
+    prev: TraceCtx,
+}
+
+/// Make `ctx` the calling thread's ambient context until the returned
+/// guard drops (used by `trace_span!` and by shard threads adopting a
+/// job's carried context).
+pub fn enter(ctx: TraceCtx) -> ScopeGuard {
+    let prev = CTX.with(|c| {
+        let p = c.get();
+        c.set(ctx);
+        p
+    });
+    ScopeGuard { prev }
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| c.set(self.prev));
+    }
+}
+
+// ---- ring buffers ---------------------------------------------------------
+
+/// One completed-span slot. Every field is an `AtomicU64` guarded by a
+/// seqlock word (`seq`): 0 = empty, odd = write in progress, even > 0 =
+/// full. All-atomic fields mean a lapped writer can at worst publish a
+/// mixed event (caught by the seq re-check in [`drain`], counted in
+/// `trace.dropped_total`) — never undefined behaviour.
+struct Slot {
+    seq: AtomicU64,
+    trace_id: AtomicU64,
+    span_id: AtomicU64,
+    parent: AtomicU64,
+    /// `name_idx | tid << 16 | a0_key << 32 | a1_key << 40` (keys are
+    /// 1-based indices into [`ARG_KEYS`], 0 = unused slot).
+    meta: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+    a0: AtomicU64,
+    a1: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace_id: AtomicU64::new(0),
+            span_id: AtomicU64::new(0),
+            parent: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+            a0: AtomicU64::new(0),
+            a1: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Ring {
+    head: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+struct Tracer {
+    epoch: Instant,
+    rings: Vec<Ring>,
+}
+
+fn tracer() -> &'static Tracer {
+    static T: OnceLock<Tracer> = OnceLock::new();
+    T.get_or_init(|| Tracer {
+        epoch: Instant::now(),
+        rings: (0..RINGS)
+            .map(|_| Ring {
+                head: AtomicU64::new(0),
+                slots: (0..RING_CAP).map(|_| Slot::new()).collect(),
+            })
+            .collect(),
+    })
+}
+
+/// Microseconds since the tracer's process epoch (monotonic across
+/// threads — all exported `ts` values share this clock).
+pub fn now_us() -> u64 {
+    tracer().epoch.elapsed().as_micros() as u64
+}
+
+type Args = [(u8, i64); MAX_ARGS];
+
+#[allow(clippy::too_many_arguments)]
+fn write_event(
+    trace_id: u64,
+    span_id: u64,
+    parent: u64,
+    name_idx: u16,
+    start_us: u64,
+    dur_us: u64,
+    args: Args,
+) {
+    let t = tracer();
+    let tid = tid();
+    let ring = match t.rings.get(tid as usize % RINGS) {
+        Some(r) => r,
+        None => return,
+    };
+    let i = ring.head.fetch_add(1, Ordering::Relaxed);
+    let slot = match ring.slots.get(i as usize % RING_CAP) {
+        Some(s) => s,
+        None => return,
+    };
+    // Claim: mark the slot mid-write. A previous undrained event (even
+    // seq) or a lapped concurrent writer (odd seq) is being destroyed
+    // either way — surface it as a drop.
+    let prev = slot.seq.swap(2 * i + 1, Ordering::Acquire);
+    if prev != 0 {
+        counter!("trace.dropped_total").inc();
+    }
+    slot.trace_id.store(trace_id, Ordering::Relaxed);
+    slot.span_id.store(span_id, Ordering::Relaxed);
+    slot.parent.store(parent, Ordering::Relaxed);
+    let meta = (name_idx as u64)
+        | ((tid & 0xFFFF) << 16)
+        | ((args[0].0 as u64) << 32)
+        | ((args[1].0 as u64) << 40);
+    slot.meta.store(meta, Ordering::Relaxed);
+    slot.start_us.store(start_us, Ordering::Relaxed);
+    slot.dur_us.store(dur_us, Ordering::Relaxed);
+    slot.a0.store(args[0].1 as u64, Ordering::Relaxed);
+    slot.a1.store(args[1].1 as u64, Ordering::Relaxed);
+    slot.seq.store(2 * i + 2, Ordering::Release);
+}
+
+// ---- spans ----------------------------------------------------------------
+
+/// RAII span, mirroring `metrics::Span`: records a completed event
+/// into the ring on drop. Inert (sample-miss / untraced / unknown
+/// name) spans skip the clock and the ring entirely.
+pub struct TraceSpan {
+    ctx: TraceCtx,
+    parent: u64,
+    name_idx: u16,
+    start_us: u64,
+    args: Args,
+}
+
+impl TraceSpan {
+    const fn inert() -> TraceSpan {
+        TraceSpan {
+            ctx: TraceCtx::NONE,
+            parent: 0,
+            name_idx: NAME_INERT,
+            start_us: 0,
+            args: [(0, 0); MAX_ARGS],
+        }
+    }
+
+    fn begin(name: &'static str, trace_id: u64, parent: u64) -> TraceSpan {
+        let Some(idx) = canon_idx(name) else {
+            return Self::inert();
+        };
+        TraceSpan {
+            ctx: TraceCtx { trace_id, span: next_id() },
+            parent,
+            name_idx: idx,
+            start_us: now_us(),
+            args: [(0, 0); MAX_ARGS],
+        }
+    }
+
+    /// Start a root span, deciding by sampling: with probability
+    /// [`sample`] it opens a fresh trace, otherwise it is inert. The
+    /// miss path is one relaxed load plus (for 0 < p < 1) one
+    /// thread-local SplitMix64 step.
+    pub fn root(name: &'static str) -> TraceSpan {
+        if sample_hit() {
+            Self::begin(name, next_id(), 0)
+        } else {
+            Self::inert()
+        }
+    }
+
+    /// Root span with an explicit trace id and start timestamp. The
+    /// serve handler must parse a request line before it can read the
+    /// client's `"trace_id"`, so the root's interval is backdated to
+    /// when the line arrived — children recorded during parsing still
+    /// nest inside it. Id 0 yields an inert span.
+    pub fn root_at(name: &'static str, trace_id: u64, start_us: u64) -> TraceSpan {
+        if trace_id == 0 {
+            return Self::inert();
+        }
+        let mut s = Self::begin(name, trace_id, 0);
+        if s.active() {
+            s.start_us = start_us;
+        }
+        s
+    }
+
+    /// Start a root span under a caller-supplied trace id (a client
+    /// that sent `"trace_id"` asked to be traced — sampling does not
+    /// apply). Id 0 falls back to sampled [`TraceSpan::root`].
+    pub fn root_with_id(name: &'static str, trace_id: u64) -> TraceSpan {
+        if trace_id == 0 {
+            Self::root(name)
+        } else {
+            Self::begin(name, trace_id, 0)
+        }
+    }
+
+    /// Start a child span under `parent`; inert when the parent
+    /// context is untraced.
+    pub fn child(name: &'static str, parent: TraceCtx) -> TraceSpan {
+        if parent.trace_id == 0 {
+            return Self::inert();
+        }
+        Self::begin(name, parent.trace_id, parent.span)
+    }
+
+    /// Context for children of this span (`NONE` when inert, so
+    /// derived spans stay inert).
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+
+    pub fn active(&self) -> bool {
+        self.ctx.trace_id != 0
+    }
+
+    /// Attach an arg (key must be in [`ARG_KEYS`]; at most
+    /// [`MAX_ARGS`] stick, extras and unknown keys are ignored).
+    pub fn set_arg(&mut self, key: &str, val: i64) {
+        if !self.active() {
+            return;
+        }
+        let Some(k) = ARG_KEYS.iter().position(|a| *a == key) else {
+            return;
+        };
+        for slot in self.args.iter_mut() {
+            if slot.0 == 0 {
+                *slot = (k as u8 + 1, val);
+                return;
+            }
+        }
+    }
+
+    /// Builder-style [`TraceSpan::set_arg`].
+    pub fn arg(mut self, key: &str, val: i64) -> TraceSpan {
+        self.set_arg(key, val);
+        self
+    }
+}
+
+impl Drop for TraceSpan {
+    fn drop(&mut self) {
+        if self.ctx.trace_id == 0 {
+            return;
+        }
+        let dur = now_us().saturating_sub(self.start_us);
+        write_event(
+            self.ctx.trace_id,
+            self.ctx.span,
+            self.parent,
+            self.name_idx,
+            self.start_us,
+            dur,
+            self.args,
+        );
+    }
+}
+
+/// Record a span whose interval was timed externally (e.g. serve's
+/// queue wait: the producer stamped `start_us`, the consuming shard
+/// knows the duration). Parented to `parent.span`; returns the new
+/// span's context so further children can nest under it.
+pub fn record(
+    name: &'static str,
+    parent: TraceCtx,
+    start_us: u64,
+    dur_us: u64,
+    args: &[(&str, i64)],
+) -> TraceCtx {
+    if parent.trace_id == 0 {
+        return TraceCtx::NONE;
+    }
+    let Some(idx) = canon_idx(name) else {
+        return TraceCtx::NONE;
+    };
+    let mut packed: Args = [(0, 0); MAX_ARGS];
+    let mut n = 0;
+    for (key, val) in args {
+        if n >= MAX_ARGS {
+            break;
+        }
+        if let Some(k) = ARG_KEYS.iter().position(|a| a == key) {
+            packed[n] = (k as u8 + 1, *val);
+            n += 1;
+        }
+    }
+    let span = next_id();
+    write_event(parent.trace_id, span, parent.span, idx, start_us, dur_us, packed);
+    TraceCtx { trace_id: parent.trace_id, span }
+}
+
+// ---- drain + export -------------------------------------------------------
+
+/// A completed span copied out of the rings.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent: u64,
+    pub name: &'static str,
+    pub tid: u16,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// `(1-based ARG_KEYS index, value)`; key 0 = empty slot.
+    pub args: Args,
+}
+
+impl SpanEvent {
+    /// Value of the named arg, if attached.
+    pub fn arg(&self, key: &str) -> Option<i64> {
+        self.args
+            .iter()
+            .filter(|(k, _)| *k != 0)
+            .find(|(k, _)| ARG_KEYS.get(*k as usize - 1) == Some(&key))
+            .map(|&(_, v)| v)
+    }
+
+    /// Attached args as `(name, value)` pairs.
+    pub fn named_args(&self) -> impl Iterator<Item = (&'static str, i64)> + '_ {
+        self.args.iter().filter_map(|&(k, v)| {
+            if k == 0 {
+                None
+            } else {
+                ARG_KEYS.get(k as usize - 1).map(|name| (*name, v))
+            }
+        })
+    }
+}
+
+/// Snapshot-and-clear every ring, returning completed spans sorted by
+/// start time. Best-effort under concurrent writers: slots mid-write
+/// or torn (seq changed during the copy) are skipped — they are
+/// counted by the writer as drops when overwritten.
+pub fn drain() -> Vec<SpanEvent> {
+    let t = tracer();
+    let mut out = Vec::new();
+    for ring in &t.rings {
+        for slot in &ring.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue;
+            }
+            let trace_id = slot.trace_id.load(Ordering::Relaxed);
+            let span_id = slot.span_id.load(Ordering::Relaxed);
+            let parent = slot.parent.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let start_us = slot.start_us.load(Ordering::Relaxed);
+            let dur_us = slot.dur_us.load(Ordering::Relaxed);
+            let a0 = slot.a0.load(Ordering::Relaxed) as i64;
+            let a1 = slot.a1.load(Ordering::Relaxed) as i64;
+            let s2 = slot.seq.load(Ordering::Acquire);
+            if s2 != s1 {
+                continue;
+            }
+            slot.seq.store(0, Ordering::Release);
+            let name_idx = (meta & 0xFFFF) as u16;
+            let Some(name) = CANON.get(name_idx as usize).copied() else {
+                continue;
+            };
+            out.push(SpanEvent {
+                trace_id,
+                span_id,
+                parent,
+                name,
+                tid: ((meta >> 16) & 0xFFFF) as u16,
+                start_us,
+                dur_us,
+                args: [(((meta >> 32) & 0xFF) as u8, a0), (((meta >> 40) & 0xFF) as u8, a1)],
+            });
+        }
+    }
+    out.sort_by_key(|e| (e.start_us, e.span_id));
+    out
+}
+
+/// Serialize events as Chrome `trace_event` JSON (the
+/// `{"traceEvents": [...]}` object form; complete "X" events with µs
+/// `ts`/`dur`), loadable in Perfetto / chrome://tracing. Trace, span,
+/// and parent ids ride in each event's `args` as hex strings.
+pub fn to_chrome(events: &[SpanEvent]) -> Json {
+    let list = events
+        .iter()
+        .map(|e| {
+            let mut args = vec![
+                ("trace_id", Json::Str(format!("{:016x}", e.trace_id))),
+                ("span_id", Json::Str(format!("{:016x}", e.span_id))),
+                ("parent", Json::Str(format!("{:016x}", e.parent))),
+            ];
+            for (k, v) in e.named_args() {
+                args.push((k, Json::Num(v as f64)));
+            }
+            Json::obj(vec![
+                ("name", Json::Str(e.name.to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(e.start_us as f64)),
+                ("dur", Json::Num(e.dur_us as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.tid as f64)),
+                ("args", Json::obj(args)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(list)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Drain the rings and write Chrome-trace JSON to `path` (the
+/// `--trace-out` implementation shared by every CLI command).
+pub fn write_chrome_trace(path: &str) -> std::io::Result<usize> {
+    let events = drain();
+    std::fs::write(path, to_chrome(&events).to_string_pretty())?;
+    Ok(events.len())
+}
+
+// ---- macro ----------------------------------------------------------------
+
+/// Trace a block as a span: child of the ambient thread context when
+/// one is active, otherwise a sampled root. The block runs with the
+/// span as the ambient context, so nested `trace_span!` calls link
+/// into a tree. Returns the block's value.
+///
+/// `trace_span!("sa.chain", { run_chain() })`
+#[macro_export]
+macro_rules! trace_span {
+    ($name:expr, $body:expr) => {{
+        let __cur = $crate::util::trace::current();
+        let __span = if __cur.trace_id != 0 {
+            $crate::util::trace::TraceSpan::child($name, __cur)
+        } else {
+            $crate::util::trace::TraceSpan::root($name)
+        };
+        let __guard = $crate::util::trace::enter(__span.ctx());
+        let __out = $body;
+        drop(__guard);
+        drop(__span);
+        __out
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // The rings, sampling knob, and ambient context are process-global;
+    // tests that drain or set sampling serialize on this.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        SERIAL.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    #[test]
+    fn canon_names_are_unique_and_layer_shaped() {
+        let mut seen = std::collections::BTreeSet::new();
+        for name in CANON {
+            assert!(seen.insert(*name), "duplicate trace CANON entry {name}");
+            assert!(
+                name.split('.').count() >= 2
+                    && name.split('.').all(|s| {
+                        !s.is_empty()
+                            && s.chars().all(|c| {
+                                c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'
+                            })
+                    }),
+                "trace CANON entry {name} is not layer.name shaped"
+            );
+            assert!(canon_idx(name).is_some());
+        }
+        assert_eq!(canon_idx("serve.accept"), Some(0));
+        assert_eq!(canon_idx("no.such.span"), None);
+        assert!(CANON.len() < NAME_INERT as usize);
+    }
+
+    #[test]
+    fn ids_are_nonzero_and_distinct() {
+        let a = next_id();
+        let b = next_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn forced_root_builds_a_drainable_tree() {
+        let _g = lock();
+        drain(); // clear residue from other tests
+        let tid = 0xABCD_u64;
+        {
+            let root = TraceSpan::root_with_id("serve.accept", tid);
+            assert!(root.active());
+            {
+                let child = TraceSpan::child("serve.parse", root.ctx()).arg("shard", 3);
+                let _grand = TraceSpan::child("serve.score", child.ctx());
+            }
+            let _sibling = TraceSpan::child("serve.reply", root.ctx());
+        }
+        let events: Vec<SpanEvent> =
+            drain().into_iter().filter(|e| e.trace_id == tid).collect();
+        assert_eq!(events.len(), 4, "root + parse + score + reply");
+        let root = events.iter().find(|e| e.name == "serve.accept").unwrap();
+        let parse = events.iter().find(|e| e.name == "serve.parse").unwrap();
+        let score = events.iter().find(|e| e.name == "serve.score").unwrap();
+        let reply = events.iter().find(|e| e.name == "serve.reply").unwrap();
+        assert_eq!(root.parent, 0);
+        assert_eq!(parse.parent, root.span_id);
+        assert_eq!(score.parent, parse.span_id);
+        assert_eq!(reply.parent, root.span_id);
+        assert_eq!(parse.arg("shard"), Some(3));
+        assert_eq!(parse.arg("batch"), None);
+        // Children drop before the root, so their intervals nest.
+        assert!(parse.start_us >= root.start_us);
+        assert!(parse.start_us + parse.dur_us <= root.start_us + root.dur_us);
+    }
+
+    #[test]
+    fn untraced_and_unknown_spans_are_inert() {
+        let _g = lock();
+        drain();
+        {
+            let none = TraceSpan::child("serve.parse", TraceCtx::NONE);
+            assert!(!none.active());
+            assert_eq!(none.ctx(), TraceCtx::NONE);
+            let unknown = TraceSpan::root_with_id("not.canonical", 7);
+            assert!(!unknown.active());
+        }
+        let old = sample();
+        set_sample(0.0);
+        {
+            let miss = TraceSpan::root("serve.accept");
+            assert!(!miss.active());
+        }
+        set_sample(old);
+        assert!(drain().iter().all(|e| e.trace_id != 7));
+    }
+
+    #[test]
+    fn sampling_rate_zero_one_and_clamp() {
+        let _g = lock();
+        let old = sample();
+        set_sample(0.5);
+        assert_eq!(sample(), 0.5);
+        set_sample(7.0);
+        assert_eq!(sample(), 1.0);
+        set_sample(-1.0);
+        assert_eq!(sample(), 0.0);
+        set_sample(f64::NAN);
+        assert_eq!(sample(), 0.0);
+        set_sample(1.0);
+        let span = TraceSpan::root("serve.accept");
+        assert!(span.active(), "p=1.0 always samples");
+        drop(span);
+        set_sample(old);
+        drain();
+    }
+
+    #[test]
+    fn record_backfills_external_interval() {
+        let _g = lock();
+        drain();
+        let parent = TraceCtx { trace_id: 0x5151, span: 9 };
+        let ctx = record("serve.queue", parent, 100, 50, &[("shard", 2), ("batch", 4)]);
+        assert_eq!(ctx.trace_id, 0x5151);
+        assert_ne!(ctx.span, 0);
+        let events: Vec<SpanEvent> =
+            drain().into_iter().filter(|e| e.trace_id == 0x5151).collect();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].name, "serve.queue");
+        assert_eq!(events[0].parent, 9);
+        assert_eq!(events[0].start_us, 100);
+        assert_eq!(events[0].dur_us, 50);
+        assert_eq!(events[0].arg("shard"), Some(2));
+        assert_eq!(events[0].arg("batch"), Some(4));
+        assert_eq!(record("serve.queue", TraceCtx::NONE, 0, 0, &[]), TraceCtx::NONE);
+    }
+
+    #[test]
+    fn overwrite_oldest_bumps_dropped_total() {
+        let _g = lock();
+        drain();
+        let dropped = crate::counter!("trace.dropped_total");
+        let before = dropped.get();
+        // One thread maps to one ring: > RING_CAP events must lap it.
+        for _ in 0..(RING_CAP + 64) {
+            let _ = record(
+                "pool.task",
+                TraceCtx { trace_id: 0xD20, span: 1 },
+                0,
+                1,
+                &[],
+            );
+        }
+        assert!(dropped.get() > before, "lapping the ring must count drops");
+        let kept = drain().into_iter().filter(|e| e.trace_id == 0xD20).count();
+        assert!(kept <= RING_CAP);
+        assert!(kept > 0);
+    }
+
+    #[test]
+    fn ambient_context_nests_via_macro() {
+        let _g = lock();
+        drain();
+        let old = sample();
+        set_sample(1.0);
+        assert_eq!(current(), TraceCtx::NONE);
+        let inner_ctx = crate::trace_span!("train.step", {
+            let cur = current();
+            assert!(cur.active(), "macro sets ambient context");
+            crate::trace_span!("pool.task", {
+                assert_eq!(current().trace_id, cur.trace_id);
+            });
+            cur
+        });
+        assert_eq!(current(), TraceCtx::NONE, "guard restores on exit");
+        set_sample(old);
+        let events: Vec<SpanEvent> =
+            drain().into_iter().filter(|e| e.trace_id == inner_ctx.trace_id).collect();
+        assert_eq!(events.len(), 2);
+        let step = events.iter().find(|e| e.name == "train.step").unwrap();
+        let task = events.iter().find(|e| e.name == "pool.task").unwrap();
+        assert_eq!(task.parent, step.span_id);
+    }
+
+    #[test]
+    fn chrome_export_shape_and_monotone_ts() {
+        let _g = lock();
+        drain();
+        let tid = 0xC42_u64;
+        {
+            let root = TraceSpan::root_with_id("serve.accept", tid);
+            let _q = record(
+                "serve.queue",
+                root.ctx(),
+                now_us(),
+                0,
+                &[("shard", 1), ("batch", 2)],
+            );
+        }
+        let events: Vec<SpanEvent> =
+            drain().into_iter().filter(|e| e.trace_id == tid).collect();
+        assert_eq!(events.len(), 2);
+        for w in events.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us, "drain sorts by ts");
+        }
+        let json = to_chrome(&events);
+        let parsed = Json::parse(&json.to_string()).expect("export must re-parse");
+        let list = parsed.req("traceEvents").as_arr().expect("traceEvents array");
+        assert_eq!(list.len(), 2);
+        for ev in list {
+            assert_eq!(ev.req("ph").as_str(), Some("X"));
+            assert!(ev.req("ts").as_f64().is_some());
+            assert!(ev.req("dur").as_f64().is_some());
+            let args = ev.req("args");
+            assert_eq!(
+                args.req("trace_id").as_str(),
+                Some(format!("{tid:016x}").as_str())
+            );
+        }
+        let queue = list
+            .iter()
+            .find(|e| e.req("name").as_str() == Some("serve.queue"))
+            .expect("queue event exported");
+        assert_eq!(queue.req("args").req("shard").as_f64(), Some(1.0));
+        assert_eq!(queue.req("args").req("batch").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn sample_spec_parses_and_falls_back() {
+        assert_eq!(parse_sample(None, 0.25), 0.25);
+        assert_eq!(parse_sample(Some("0.5"), 0.01), 0.5);
+        assert_eq!(parse_sample(Some(" 1 "), 0.01), 1.0);
+        assert_eq!(parse_sample(Some("nope"), 0.75), 0.75);
+    }
+}

@@ -1,6 +1,8 @@
 //! Service-level integration: telemetry consistency of the `{"stats":
-//! true}` surface, the jobs-based shutdown contract, and the error
-//! paths of the JSON-lines protocol. Requires `make artifacts`.
+//! true}` surface, the jobs-based shutdown contract, the error paths
+//! of the JSON-lines protocol, and end-to-end trace propagation
+//! (client-supplied trace ids, the span tree, the `{"trace": true}`
+//! export). Requires `make artifacts`.
 //!
 //! All tests in this binary share the process-global metrics registry
 //! (and the jobs/queue-wait invariant is asserted over registry
@@ -211,6 +213,96 @@ fn request_after_job_budget_exhausted_gets_error_reply() {
     done_rx
         .recv_timeout(Duration::from_secs(60))
         .expect("serve() must return after the budget is spent");
+}
+
+#[test]
+fn traced_request_echoes_id_and_exports_nested_span_tree() {
+    let _g = SERIAL.lock().unwrap();
+    let (addr, _server) = start_server(2, None);
+
+    // A client-supplied trace id forces tracing regardless of the
+    // sampling knob (which defaults to 0 in this test binary — no CLI
+    // init ran — so every *other* request in this file stays untraced).
+    let tid: u64 = 0xC05A_7E11;
+    let resp = serve::request_traced(addr, 42, 3, &test_matrix(42), tid).unwrap();
+    assert!(resp.get("error").is_none(), "server error: {}", resp.to_string());
+    assert_eq!(
+        resp.req("trace_id").as_str(),
+        Some(format!("{tid:016x}").as_str()),
+        "reply must echo the client's trace id"
+    );
+
+    // The reply is written before the accept/reply spans drop on the
+    // server side, so poll the rings briefly. drain() clears as it
+    // reads — accumulate across polls.
+    let want = [
+        "serve.accept",
+        "serve.parse",
+        "serve.route",
+        "serve.queue",
+        "serve.linger",
+        "serve.featurize",
+        "serve.score",
+        "serve.reply",
+    ];
+    let mut events: Vec<cognate::util::trace::SpanEvent> = Vec::new();
+    for _ in 0..200 {
+        events.extend(cognate::util::trace::drain().into_iter().filter(|e| e.trace_id == tid));
+        if want.iter().all(|w| events.iter().any(|e| e.name == *w)) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let by_name = |n: &str| {
+        events
+            .iter()
+            .find(|e| e.name == n)
+            .unwrap_or_else(|| panic!("span {n} missing from trace: {events:?}"))
+    };
+    let accept = by_name("serve.accept");
+    assert_eq!(accept.parent, 0, "accept is the root span");
+    for n in &want[1..] {
+        let child = by_name(n);
+        assert_eq!(child.parent, accept.span_id, "{n} must parent to serve.accept");
+        // Children run strictly inside the root interval: the root is
+        // backdated to line arrival and only drops after the reply.
+        assert!(child.start_us >= accept.start_us, "{n} starts inside the root");
+        assert!(
+            child.start_us + child.dur_us <= accept.start_us + accept.dur_us,
+            "{n} ends inside the root"
+        );
+    }
+    // The shard stamped its identity on the batch-phase spans.
+    let shard = resp.req("shard").as_usize().unwrap() as i64;
+    for n in ["serve.queue", "serve.linger", "serve.featurize", "serve.score"] {
+        assert_eq!(by_name(n).arg("shard"), Some(shard), "{n} carries the shard id");
+    }
+    assert!(by_name("serve.linger").arg("batch").is_some(), "linger carries the batch id");
+
+    // The live-export surface: a second traced request, then the
+    // {"trace": true} control request must return Chrome trace_event
+    // JSON containing it, and the control must be counted.
+    let tid2: u64 = 0xC05A_7E22;
+    let resp2 = serve::request_traced(addr, 43, 3, &test_matrix(43), tid2).unwrap();
+    assert!(resp2.get("error").is_none());
+    std::thread::sleep(Duration::from_millis(100)); // let the server-side spans drop
+    let chrome = serve::request_trace(addr).unwrap();
+    let list = chrome.req("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!list.is_empty());
+    for ev in list {
+        assert_eq!(ev.req("ph").as_str(), Some("X"));
+        assert!(ev.req("ts").as_f64().unwrap() >= 0.0);
+        assert!(ev.req("dur").as_f64().unwrap() >= 0.0);
+    }
+    let tid2_hex = format!("{tid2:016x}");
+    assert!(
+        list.iter().any(|ev| {
+            ev.req("args").get("trace_id").and_then(|v| v.as_str()) == Some(tid2_hex.as_str())
+        }),
+        "exported trace must contain the second traced request"
+    );
+    let snap = serve::request_stats(addr).unwrap();
+    assert!(counter_of(&snap, "serve.trace_requests_total") >= 1);
 }
 
 #[test]

@@ -78,6 +78,13 @@ echo "== telemetry hot-path bench → BENCH_metrics.json =="
 BENCH_OUT="$(pwd)/BENCH_metrics.json" \
     cargo bench --bench bench_metrics --manifest-path "$manifest"
 
+echo "== trace hot-path bench → BENCH_trace.json =="
+# bench_trace exits non-zero if a sample-miss trace_span! exceeds its
+# 20ns gate (i.e. the always-on tracing fast path grew a clock read or
+# a ring write).
+BENCH_OUT="$(pwd)/BENCH_trace.json" \
+    cargo bench --bench bench_trace --manifest-path "$manifest"
+
 echo "== serve batching A/B bench → BENCH_serve.json =="
 # bench_serve exits non-zero unless p95 queue wait improves with
 # 4 shards + adaptive linger over 1 shard + fixed 8ms linger.
@@ -89,8 +96,10 @@ echo "== telemetry smoke: serve demo + snapshot =="
 # matching how the artifact-gated tests behave.
 if [ -d "${COGNATE_ARTIFACTS:-artifacts}" ]; then
     snap="$(pwd)/METRICS_serve_demo.json"
-    cargo run --release --manifest-path "$manifest" --example serve_demo -- \
-        --metrics-out "$snap"
+    trace_json="$(pwd)/TRACE_serve_demo.json"
+    COGNATE_TRACE_SAMPLE=1 \
+        cargo run --release --manifest-path "$manifest" --example serve_demo -- \
+        --metrics-out "$snap" --trace-out "$trace_json"
     if command -v python3 >/dev/null 2>&1; then
         python3 - "$snap" <<'EOF'
 import json, sys
@@ -109,6 +118,41 @@ EOF
     fi
 else
     echo "verify.sh: artifacts/ absent — skipping serve-demo telemetry smoke"
+fi
+
+echo "== trace smoke: Chrome-trace export is well-formed =="
+# The demo above ran with COGNATE_TRACE_SAMPLE=1, so every served job
+# must be in the export: the JSON must parse as Chrome trace_event,
+# with sorted non-negative timestamps and the full serve span tree.
+if [ -f "${trace_json:-}" ]; then
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - "$trace_json" <<'EOF'
+import json, sys
+trace = json.load(open(sys.argv[1]))
+events = trace["traceEvents"]
+assert events, "trace export is empty at sampling 1.0"
+last_ts = -1
+for e in events:
+    assert e["ph"] == "X", f"unexpected phase {e['ph']!r}"
+    assert e["ts"] >= last_ts >= -1 and e["ts"] >= 0, f"ts not monotonic: {e}"
+    assert e["dur"] >= 0, f"negative dur: {e}"
+    last_ts = e["ts"]
+names = {e["name"] for e in events}
+need = {"serve.accept", "serve.queue", "serve.linger", "serve.featurize",
+        "serve.score", "serve.reply"}
+missing = need - names
+assert not missing, f"span tree incomplete, missing {sorted(missing)}"
+print(f"trace smoke OK: {len(events)} spans, monotonic ts, tree complete")
+EOF
+    else
+        grep -q '"traceEvents"' "$trace_json" \
+            && grep -q '"serve.accept"' "$trace_json" \
+            && grep -q '"serve.score"' "$trace_json" \
+            || { echo "verify.sh: $trace_json missing serve spans" >&2; exit 1; }
+        echo "trace smoke OK (grep fallback)"
+    fi
+else
+    echo "verify.sh: no trace export (artifacts absent) — skipping trace smoke"
 fi
 
 echo "verify.sh: all gates passed"
